@@ -1,0 +1,49 @@
+"""RQ1 (paper Fig. 1): speedup of in-process evaluation over the
+serialize-invoke-parse workflow, across query/doc grid sizes and storages.
+
+The paper's protocol, reproduced: rankings synthesized with distinct integer
+scores and relevance 1 (``synthesize_run``); the run is serialized unsorted;
+the child's stdout is read into a string but not parsed; speedup =
+t(serialize-invoke-parse) / t(in-process).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.baselines import workflow
+from repro.core import RelevanceEvaluator
+from repro.data.synthetic_ir import synthesize_run
+
+from benchmarks.common import storage_dirs, time_call
+
+MEASURES = ("map", "ndcg")
+
+
+def run(full: bool = False) -> List[Dict]:
+    reps = 20 if full else 3
+    grid_q = (1, 10, 100, 1000, 10_000) if full else (1, 10, 100, 1000)
+    grid_d = (1, 10, 100, 1000)
+    rows = []
+    for nq in grid_q:
+        for nd in grid_d:
+            run_dict, qrel = synthesize_run(nq, nd)
+
+            def in_process():
+                ev = RelevanceEvaluator(qrel, MEASURES)
+                ev.evaluate(run_dict)
+
+            t_in = time_call(in_process, reps=reps)
+            row = {"n_queries": nq, "n_docs": nd,
+                   "inprocess_us": t_in * 1e6}
+            for storage, workdir in storage_dirs().items():
+                t_sip = time_call(
+                    lambda: workflow.serialize_invoke_parse(
+                        run_dict, qrel, workdir, MEASURES),
+                    reps=reps, warmup=0)
+                row[f"sip_{storage}_us"] = t_sip * 1e6
+                row[f"speedup_{storage}"] = t_sip / t_in
+            rows.append(row)
+            print(f"rq1 q={nq} d={nd}: " + " ".join(
+                f"{k}={row[k]:.1f}" for k in row if k.startswith("speedup")))
+    return rows

@@ -1,0 +1,35 @@
+"""RQ2 (paper Fig. 2): in-process engine vs native-Python NDCG, single query,
+varying ranking depth.  The paper finds native Python wins below ~5 docs
+(internal-format conversion overhead) and loses ~2× at 100–1000 docs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.baselines import native_ndcg
+from repro.core import RelevanceEvaluator
+from repro.data.synthetic_ir import synthesize_run
+
+from benchmarks.common import time_call
+
+
+def run(full: bool = False) -> List[Dict]:
+    reps = 20 if full else 5
+    depths = (1, 2, 3, 5, 10, 31, 100, 316, 1000, 3162, 10_000)
+    rows = []
+    for nd in depths:
+        run_dict, qrel = synthesize_run(1, nd)
+        docs, rels = run_dict["q0"], qrel["q0"]
+
+        # evaluator construction (the one-time qrel parse) is outside the
+        # timed region, matching the paper's per-evaluation comparison
+        ev = RelevanceEvaluator(qrel, ("ndcg",))
+        t_ours = time_call(lambda: ev.evaluate(run_dict), reps=reps)
+        t_native = time_call(lambda: native_ndcg.ndcg(docs, rels), reps=reps)
+        rows.append({"n_docs": nd, "ours_us": t_ours * 1e6,
+                     "native_us": t_native * 1e6,
+                     "speedup": t_native / t_ours})
+        print(f"rq2 d={nd}: ours={t_ours*1e6:.0f}us native="
+              f"{t_native*1e6:.0f}us speedup={t_native/t_ours:.2f}")
+    return rows

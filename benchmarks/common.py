@@ -1,0 +1,32 @@
+"""Shared benchmark utilities (timing protocol follows the paper §3)."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, reps: int = 3, warmup: int = 1) -> float:
+    """Mean wall seconds over ``reps`` (after ``warmup`` unmeasured calls).
+
+    The paper repeats every configuration 20 times and reports the average;
+    ``--full`` restores that (reps=20).  Warmup excludes one-time jit
+    compilation, which has no analogue in the C tool being reproduced.
+    """
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def storage_dirs() -> dict:
+    """Available storage backends: disk (filesystem) and tmpfs (RAM)."""
+    out = {"disk": "/tmp/repro_bench"}
+    if os.path.isdir("/dev/shm"):
+        out["tmpfs"] = "/dev/shm/repro_bench"
+    for d in out.values():
+        os.makedirs(d, exist_ok=True)
+    return out

@@ -1,0 +1,61 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a JSON dump under
+experiments/bench_results.json for EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (20 reps, 10k queries)")
+    ap.add_argument("--only", action="append", default=None,
+                    choices=("rq1", "rq2", "qlearning", "batched"))
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_batched, bench_qlearning, bench_rq1, \
+        bench_rq2
+
+    suites = {
+        "rq1": bench_rq1.run,
+        "rq2": bench_rq2.run,
+        "qlearning": bench_qlearning.run,
+        "batched": bench_batched.run,
+    }
+    selected = args.only or list(suites)
+    results = {}
+    for name in selected:
+        print(f"=== {name} ===", flush=True)
+        results[name] = suites[name](full=args.full)
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as fh:
+        json.dump(results, fh, indent=1)
+
+    print("\nname,us_per_call,derived")
+    for row in results.get("rq1", []):
+        for k in row:
+            if k.startswith("speedup_"):
+                print(f"rq1_q{row['n_queries']}_d{row['n_docs']}_{k[8:]},"
+                      f"{row['inprocess_us']:.1f},speedup={row[k]:.2f}")
+    for row in results.get("rq2", []):
+        print(f"rq2_d{row['n_docs']},{row['ours_us']:.1f},"
+              f"speedup={row['speedup']:.2f}")
+    for row in results.get("qlearning", []):
+        print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
+              f"tail_reward={row['tail_avg_reward']:+.4f}")
+    for row in results.get("batched", []):
+        print(f"batched_dense,{row['dense_batched_us']:.1f},"
+              f"speedup_vs_dict={row['dense_speedup_vs_dict']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Batched recsys serving with in-loop device-resident evaluation.
+
+A SASRec ranker answers batched slate-ranking requests; NDCG@10 / MRR of
+every response batch is computed inside the same jitted call (the
+pytrec_eval pattern: evaluation lives with the scores).  A second phase runs
+1M-candidate retrieval through the blocked top-K Pallas kernel.
+
+    PYTHONPATH=src python examples/serve_recsys.py [--requests 20]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import smoke_shape
+from repro.kernels import ops
+from repro.launch.api import get_arch
+from repro.models.recsys import SASRecConfig, sasrec_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--slate", type=int, default=128)
+    ap.add_argument("--n-items", type=int, default=50_000)
+    ap.add_argument("--n-candidates", type=int, default=200_000)
+    args = ap.parse_args()
+
+    cfg = SASRecConfig(name="serve", n_items=args.n_items, embed_dim=50,
+                       n_blocks=2, n_heads=1, seq_len=50)
+    params = sasrec_init(jax.random.PRNGKey(0), cfg)
+    arch = get_arch("sasrec")
+    shape = smoke_shape(arch.shapes["serve_p99"], batch=args.batch,
+                        slate=args.slate)
+    bundle = arch.make_step(cfg, shape, None)
+    serve = jax.jit(bundle.step_fn)
+
+    rng = np.random.default_rng(0)
+    lat = []
+    print(f"serving {args.requests} request batches "
+          f"(batch={args.batch}, slate={args.slate})...")
+    for i in range(args.requests):
+        batch = {
+            "items": jnp.asarray(rng.integers(
+                0, cfg.n_items, (args.batch, cfg.seq_len)), jnp.int32),
+            "pos": jnp.asarray(rng.integers(
+                0, cfg.n_items, (args.batch, cfg.seq_len)), jnp.int32),
+            "neg": jnp.asarray(rng.integers(
+                0, cfg.n_items, (args.batch, cfg.seq_len)), jnp.int32),
+            "mask": jnp.ones((args.batch, cfg.seq_len), bool),
+        }
+        cand = jnp.asarray(rng.integers(
+            0, cfg.n_items, (args.batch, args.slate)), jnp.int32)
+        rel = jnp.zeros((args.batch, args.slate), jnp.int32
+                        ).at[:, rng.integers(0, args.slate)].set(1)
+        t0 = time.perf_counter()
+        scores, metrics = serve(params, batch, cand, rel)
+        jax.block_until_ready(scores)
+        lat.append(time.perf_counter() - t0)
+        if i % 5 == 0:
+            print(f"  req {i}: ndcg@10={float(metrics['ndcg_cut_10']):.4f} "
+                  f"mrr={float(metrics['recip_rank']):.4f} "
+                  f"({lat[-1]*1e3:.1f} ms)")
+    lat_ms = np.array(lat[1:]) * 1e3  # drop compile
+    print(f"latency p50={np.percentile(lat_ms, 50):.1f}ms "
+          f"p99={np.percentile(lat_ms, 99):.1f}ms")
+
+    # --- retrieval: top-1000 of n_candidates via the Pallas top-K kernel ---
+    print(f"\nretrieval: top-1000 of {args.n_candidates} candidates "
+          "(blocked bitonic top-K kernel, interpret mode)...")
+    user = jnp.asarray(rng.standard_normal((1, 50)).astype(np.float32))
+    cand_emb = jnp.asarray(rng.standard_normal(
+        (args.n_candidates, 50)).astype(np.float32))
+    scores = (user @ cand_emb.T)
+    t0 = time.perf_counter()
+    v, i = ops.topk(scores, 1000)
+    jax.block_until_ready(v)
+    print(f"  kernel top-1000 done in {time.perf_counter()-t0:.2f}s; "
+          f"best score {float(v[0, 0]):.3f} @ item {int(i[0, 0])}")
+    rv, ri = jax.lax.top_k(scores, 1000)
+    assert bool((i == ri).all()), "kernel disagrees with lax.top_k"
+    print("  verified against lax.top_k ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — a device-resident IR-evaluation training/serving framework in JAX.
+
+Reproduction + TPU-scale extension of *Pytrec_eval: An Extremely Fast Python
+Interface to trec_eval* (Van Gysel & de Rijke, SIGIR 2018).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+"""Post-compile analysis: HLO collective accounting + roofline terms."""

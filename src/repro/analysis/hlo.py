@@ -1,0 +1,88 @@
+"""Collective-byte accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` has no collective entry, so we parse the
+post-SPMD HLO: every ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op contributes its *result* bytes
+(the standard per-device traffic proxy; reduce-scatter is scaled by its group
+size since its result is the already-scattered shard).  ``-start`` variants
+are counted once (their ``-done`` twins are skipped).
+
+The compiled module is the per-device SPMD program, so totals here are
+**bytes per device**; multiply by chip count for fabric-global traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op kind (bytes)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match ` = <type> <kind>(` and `<kind>-start(`
+            if re.search(rf"\)?\s{kind}(-start)?\(", " " + rhs):
+                if f"{kind}-done" in rhs:
+                    break
+                # result type is between '=' and the op name
+                type_str = rhs.split(kind)[0]
+                nbytes = _shape_bytes(type_str)
+                if kind == "reduce-scatter":
+                    nbytes *= _group_size(rhs)
+                out[kind] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def flop_summary(cost: Dict[str, float]) -> Dict[str, float]:
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+    }

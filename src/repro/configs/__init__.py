@@ -1,0 +1,5 @@
+"""One module per assigned architecture (+ the paper's own eval workload).
+
+Each module registers an :class:`repro.launch.api.ArchDef`; use
+``repro.launch.api.get_arch(name)`` / ``list_archs()``.
+"""

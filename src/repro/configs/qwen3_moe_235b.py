@@ -1,0 +1,46 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-30B-A3B family; hf]
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536 vocab=151936, MoE 128 experts top-8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.configs.common import lm_shapes
+from repro.launch.api import ArchDef, register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_config(smoke: bool = False) -> TransformerConfig:
+    if smoke:
+        return TransformerConfig(
+            name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=8,
+            n_kv_heads=2, d_ff=96, vocab_size=512, ffn="swiglu",
+            moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=48,
+                          capacity_factor=2.0),
+            dtype="float32", remat=False)
+    return TransformerConfig(
+        name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+        n_kv_heads=4, d_ff=1536, vocab_size=151_936, ffn="swiglu",
+        moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=1536,
+                      capacity_factor=1.25),
+        dtype="bfloat16", remat=True)
+
+
+def _make_step(cfg, shape, mesh):
+    from repro.launch.steps import lm_step_bundle
+
+    return lm_step_bundle(cfg, shape, mesh, fsdp=True,
+                          opt_memory_efficient=True)
+
+
+ARCH = register(ArchDef(
+    name="qwen3-moe-235b-a22b",
+    family="lm",
+    shapes=lm_shapes(),
+    make_config=make_config,
+    make_step=_make_step,
+    notes="MoE: EP over `model` + expert FSDP over `data` (ZeRO-3 gather).",
+))

@@ -1,0 +1,37 @@
+"""Device-resident IR evaluation (the paper's contribution, on TPU).
+
+Public API mirrors pytrec_eval:
+
+* :class:`RelevanceEvaluator` — dict-in / dict-out evaluation.
+* :data:`supported_measures` — measure families available.
+* ``measures`` / ``streaming`` — batched + in-loop device entry points.
+"""
+
+from repro.core.evaluator import RelevanceEvaluator, aggregate_results
+from repro.core.measures import (
+    DEFAULT_CUTOFFS,
+    SUPPORTED_MEASURES as supported_measures,
+    EvalBatch,
+    batch_from_dense,
+    compute_measures,
+    compute_measures_jit,
+    measure_keys,
+    parse_measures,
+)
+from repro.core import streaming, trec, sorting
+
+__all__ = [
+    "RelevanceEvaluator",
+    "aggregate_results",
+    "supported_measures",
+    "DEFAULT_CUTOFFS",
+    "EvalBatch",
+    "batch_from_dense",
+    "compute_measures",
+    "compute_measures_jit",
+    "measure_keys",
+    "parse_measures",
+    "streaming",
+    "trec",
+    "sorting",
+]

@@ -1,0 +1,169 @@
+"""pytrec_eval-compatible evaluator front-end.
+
+:class:`RelevanceEvaluator` reproduces the pytrec_eval API:
+
+    >>> qrel = {'q1': {'d1': 0, 'd2': 1}, 'q2': {'d1': 1}}
+    >>> evaluator = RelevanceEvaluator(qrel, {'map', 'ndcg'})
+    >>> run = {'q1': {'d1': 1.0, 'd2': 0.0}, 'q2': {'d1': 1.5, 'd2': 0.2}}
+    >>> results = evaluator.evaluate(run)
+    >>> sorted(results['q1'])
+    ['map', 'ndcg']
+
+Internally the dict-of-dicts run is densified into a padded ``EvalBatch`` and
+dispatched to the jitted batched measure core (``core.measures``).  Padding is
+bucketed to powers of two so repeated calls with similar shapes reuse the same
+compiled executable — the analogue of pytrec_eval's "conversion to trec_eval's
+internal format", and like the paper's, it is the dominant cost for tiny
+rankings (RQ2 crossover).
+
+The qrel-side statistics (R, judged-non-relevant count, ideal gain vector) are
+precomputed once at construction, mirroring pytrec_eval's one-time qrel parse.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import measures as M
+
+RunType = Mapping[str, Mapping[str, float]]
+QrelType = Mapping[str, Mapping[str, int]]
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class RelevanceEvaluator:
+    """Evaluate rankings against relevance judgments, trec_eval semantics."""
+
+    def __init__(
+        self,
+        query_relevance: QrelType,
+        measures: Iterable[str],
+        relevance_level: int = 1,
+    ):
+        if not isinstance(query_relevance, Mapping):
+            raise TypeError("query_relevance must be a mapping qid -> {doc: rel}")
+        self.relevance_level = float(relevance_level)
+        self.measures = M.parse_measures(tuple(measures))
+        self.measure_keys = M.measure_keys(tuple(measures))
+        # Normalize keys only when needed (the copy is O(total judgments);
+        # pytrec_eval's C conversion pays the same cost, ~10× cheaper).
+        needs_norm = any(
+            not isinstance(q, str)
+            or any(not isinstance(d, str) for d in docs)
+            for q, docs in list(query_relevance.items())[:1])
+        if needs_norm:
+            self._qrel: Dict[str, Dict[str, int]] = {
+                str(q): {str(d): int(r) for d, r in docs.items()}
+                for q, docs in query_relevance.items()
+            }
+        else:
+            self._qrel = dict(query_relevance)
+        # Per-query qrel statistics (computed once; pytrec_eval's qrel parse).
+        # Docnos are kept as a *sorted numpy string array* so the run→rel join
+        # in _densify is a vectorized searchsorted, not a Python dict loop.
+        self._qstats = {}
+        self._qrel_sorted = {}
+        for qid, docs in self._qrel.items():
+            rels = np.array(sorted(docs.values(), reverse=True), dtype=np.float32)
+            n_rel = float((rels >= self.relevance_level).sum())
+            n_nonrel = float(len(rels)) - n_rel
+            self._qstats[qid] = (rels, n_rel, n_nonrel)
+            docnos = np.array(list(docs.keys()))
+            vals = np.fromiter(docs.values(), dtype=np.float32,
+                               count=len(docs))
+            order = np.argsort(docnos)
+            self._qrel_sorted[qid] = (docnos[order], vals[order])
+
+    #: queries per device batch: bounds padding waste and lets consecutive
+    #: chunks reuse one compiled executable (pytrec_eval's C loop analogue)
+    chunk_queries: int = 2048
+
+    # -- pytrec_eval API -----------------------------------------------------
+
+    def evaluate(self, run: RunType) -> Dict[str, Dict[str, float]]:
+        """Evaluate a run: {qid: {docno: score}} -> {qid: {measure: value}}."""
+        qids = [q for q in run if q in self._qrel]
+        if not qids:
+            return {}
+        out: Dict[str, Dict[str, float]] = {}
+        for lo in range(0, len(qids), self.chunk_queries):
+            chunk = qids[lo:lo + self.chunk_queries]
+            batch, _ = self._densify(run, chunk)
+            per_query = M.compute_measures_jit(batch, self.measures,
+                                               self.relevance_level)
+            per_query = {k: np.asarray(v) for k, v in per_query.items()}
+            for i, qid in enumerate(chunk):
+                out[qid] = {k: float(per_query[k][i])
+                            for k in self.measure_keys}
+        return out
+
+    # -- densification --------------------------------------------------------
+
+    def _densify(self, run: RunType, qids: Sequence[str]):
+        nq = len(qids)
+        max_d = max(len(run[q]) for q in qids)
+        max_j = max(len(self._qstats[q][0]) for q in qids)
+        qb, db, jb = _bucket(nq, 1), _bucket(max_d), _bucket(max(max_j, 1))
+
+        scores = np.zeros((qb, db), dtype=np.float32)
+        tiebreak = np.zeros((qb, db), dtype=np.int32)
+        rel = np.zeros((qb, db), dtype=np.float32)
+        judged = np.zeros((qb, db), dtype=bool)
+        mask = np.zeros((qb, db), dtype=bool)
+        ideal = np.zeros((qb, jb), dtype=np.float32)
+        n_rel = np.zeros((qb,), dtype=np.float32)
+        n_nonrel = np.zeros((qb,), dtype=np.float32)
+        qmask = np.zeros((qb,), dtype=bool)
+
+        for i, qid in enumerate(qids):
+            docs = run[qid]
+            d = len(docs)
+            docnos = np.array(list(docs.keys()))
+            # trec_eval tie-break: larger docno (desc lex) wins → order rank.
+            order = np.empty(d, dtype=np.int32)
+            order[np.argsort(docnos)[::-1]] = np.arange(d, dtype=np.int32)
+            scores[i, :d] = np.fromiter(docs.values(), dtype=np.float32,
+                                        count=d)
+            tiebreak[i, :d] = order
+            # vectorized run→qrel join (sorted-array searchsorted, C speed)
+            qrel_docnos, qrel_vals = self._qrel_sorted[qid]
+            if len(qrel_docnos):
+                pos = np.searchsorted(qrel_docnos, docnos)
+                pos_c = np.minimum(pos, len(qrel_docnos) - 1)
+                hit = qrel_docnos[pos_c] == docnos
+                rel[i, :d] = np.where(hit, qrel_vals[pos_c], 0.0)
+                judged[i, :d] = hit
+            mask[i, :d] = True
+            rels, r, n = self._qstats[qid]
+            ideal[i, : len(rels)] = rels
+            n_rel[i], n_nonrel[i] = r, n
+            qmask[i] = True
+
+        # numpy arrays go straight into the jitted call (single transfer);
+        # no intermediate per-array device_put.
+        batch = M.EvalBatch(
+            scores=scores, tiebreak=tiebreak, rel=rel, judged=judged,
+            mask=mask, ideal_rel=ideal, n_rel=n_rel,
+            n_judged_nonrel=n_nonrel, query_mask=qmask,
+        )
+        return batch, qmask
+
+
+def aggregate_results(results: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    """Mean of every measure over queries (trec_eval's 'all' summary row)."""
+    if not results:
+        return {}
+    keys = next(iter(results.values())).keys()
+    return {
+        k: float(np.mean([results[q][k] for q in results])) for k in keys
+    }

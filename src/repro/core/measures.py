@@ -1,0 +1,423 @@
+"""Batched trec_eval evaluation measures on dense ``[Q, D]`` tensors.
+
+This is the device-resident core of the framework: the reference measure
+definitions of trec_eval, re-expressed as vectorized JAX computations over a
+whole batch of queries at once.  Where trec_eval walks each ranking once in C,
+we compute cumulative statistics over the sorted relevance tensor with a single
+pass of vector ops — the same one-pass structure, MXU/VPU-friendly.
+
+Semantics follow trec_eval (and therefore pytrec_eval):
+
+* documents are ranked by decreasing score, ties broken by docno (descending
+  lex — encoded in the ``tiebreak`` field, see ``core.sorting``);
+* unjudged documents count as non-relevant;
+* a document is *relevant* iff its judgment >= ``relevance_level`` (default 1);
+* ``map`` / ``recall`` / ``Rprec`` normalize by R = number of relevant docs in
+  the **qrels** (including unretrieved ones);
+* ``ndcg`` uses trec_eval's linear gain (rel / log2(rank+1)) with the ideal
+  ranking drawn from the full qrels;
+* cutoffs match trec_eval: 5,10,15,20,30,100,200,500,1000 (success: 1,5,10).
+
+All measure functions operate on an :class:`EvalBatch` and return per-query
+float32 vectors ``[Q]``; padded queries (``query_mask == False``) return 0 and
+are excluded by the aggregation helpers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sorting
+
+DEFAULT_CUTOFFS: Tuple[int, ...] = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
+SUCCESS_CUTOFFS: Tuple[int, ...] = (1, 5, 10)
+IPREC_LEVELS: Tuple[float, ...] = tuple(round(0.1 * i, 1) for i in range(11))
+
+#: Measure families understood by this module (pytrec_eval-compatible ids).
+SUPPORTED_MEASURES = frozenset(
+    {
+        "map",
+        "ndcg",
+        "recip_rank",
+        "Rprec",
+        "bpref",
+        "P",
+        "recall",
+        "ndcg_cut",
+        "map_cut",
+        "success",
+        "iprec_at_recall",
+        "num_ret",
+        "num_rel",
+        "num_rel_ret",
+    }
+)
+
+
+class EvalBatch(NamedTuple):
+    """Dense, padded representation of a batch of rankings + ground truth.
+
+    Axes: Q = queries (padded), D = retrieved docs per query (padded),
+    J = judged docs per query (padded; used only for the ideal DCG).
+    """
+
+    scores: jax.Array  # [Q, D] f32 — retrieval scores (order irrelevant)
+    tiebreak: jax.Array  # [Q, D] i32 — smaller wins ties (docno desc-lex rank)
+    rel: jax.Array  # [Q, D] f32 — judgment of each retrieved doc (0 unjudged)
+    judged: jax.Array  # [Q, D] bool — retrieved doc appears in the qrels
+    mask: jax.Array  # [Q, D] bool — retrieved doc is real (not padding)
+    ideal_rel: jax.Array  # [Q, J] f32 — qrel judgments, sorted descending
+    n_rel: jax.Array  # [Q] f32 — R: relevant docs in qrels (rel >= level)
+    n_judged_nonrel: jax.Array  # [Q] f32 — judged non-relevant docs in qrels
+    query_mask: jax.Array  # [Q] bool — query is real (not padding)
+
+
+class SortedBatch(NamedTuple):
+    """EvalBatch after ranking: everything ordered by trec_eval rank."""
+
+    rel: jax.Array  # [Q, D] f32, rank order
+    binrel: jax.Array  # [Q, D] f32 (0/1), rank order
+    judged: jax.Array  # [Q, D] f32 (0/1), rank order
+    mask: jax.Array  # [Q, D] f32 (0/1), rank order
+    cum_rel: jax.Array  # [Q, D] f32 — inclusive cumulative count of relevant
+    ideal_rel: jax.Array  # [Q, J] f32
+    n_rel: jax.Array  # [Q] f32
+    n_judged_nonrel: jax.Array  # [Q] f32
+    n_ret: jax.Array  # [Q] f32
+    query_mask: jax.Array  # [Q] bool
+
+
+_PACK_OFFSET = 4.0  # rel values ≥ -4 supported (trec_eval uses ≥ -2)
+
+
+def sort_batch(batch: EvalBatch, relevance_level: float = 1.0) -> SortedBatch:
+    """Rank every query's documents under trec_eval ordering.
+
+    Perf note (§Perf iteration C2): (rel, judged) ride the sort as ONE packed
+    f32 payload — ``(rel+4)·2 + judged`` — and the mask is not sorted at all
+    (padding sorts last with rel=0/judged=0, which is inert for every
+    measure; n_ret is an order-invariant pre-sort sum).  This halves the
+    multi-operand sort's traffic vs the naive 5-payload formulation.
+    """
+    assert relevance_level >= 1.0 or relevance_level > 0, \
+        "packed-payload sort assumes relevance_level > 0"
+    packed = (batch.rel * jnp.asarray(batch.mask, jnp.float32)
+              + _PACK_OFFSET) * 2.0 + jnp.asarray(
+        batch.judged & batch.mask, jnp.float32)
+    packed = jnp.where(batch.mask, packed, _PACK_OFFSET * 2.0)
+    (packed_s,) = sorting.rank_sort(
+        batch.scores, batch.tiebreak, batch.mask, packed)[1:]
+    judged_s = packed_s - 2.0 * jnp.floor(packed_s / 2.0)
+    rel_s = jnp.floor(packed_s / 2.0) - _PACK_OFFSET
+    binrel = jnp.where(rel_s >= relevance_level, 1.0, 0.0)
+    cum_rel = jnp.cumsum(binrel, axis=-1)
+    return SortedBatch(
+        rel=rel_s,
+        binrel=binrel,
+        judged=judged_s,
+        mask=jnp.ones_like(rel_s),
+        cum_rel=cum_rel,
+        ideal_rel=batch.ideal_rel,
+        n_rel=batch.n_rel,
+        n_judged_nonrel=batch.n_judged_nonrel,
+        n_ret=jnp.sum(batch.mask.astype(jnp.float32), axis=-1),
+        query_mask=batch.query_mask,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Individual measures (each: SortedBatch -> [Q] f32).
+# ---------------------------------------------------------------------------
+
+
+def _ranks(d: int) -> jax.Array:
+    return jnp.arange(1, d + 1, dtype=jnp.float32)
+
+
+def _safe_div(num, den):
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+
+
+def _at_rank(cum: jax.Array, k: int) -> jax.Array:
+    """cum value at 1-based rank k (clipped to the retrieved-depth D)."""
+    d = cum.shape[-1]
+    return cum[..., min(k, d) - 1]
+
+
+def average_precision(s: SortedBatch) -> jax.Array:
+    d = s.binrel.shape[-1]
+    prec = s.cum_rel / _ranks(d)
+    ap = jnp.sum(s.binrel * prec, axis=-1)
+    return _safe_div(ap, s.n_rel)
+
+
+def map_cut(s: SortedBatch, k: int) -> jax.Array:
+    d = s.binrel.shape[-1]
+    within = (_ranks(d) <= k).astype(jnp.float32)
+    prec = s.cum_rel / _ranks(d)
+    ap = jnp.sum(s.binrel * prec * within, axis=-1)
+    return _safe_div(ap, s.n_rel)
+
+
+def precision_at(s: SortedBatch, k: int) -> jax.Array:
+    # trec_eval always divides by k, even when fewer than k docs were retrieved.
+    return _at_rank(s.cum_rel, k) / float(k)
+
+
+def recall_at(s: SortedBatch, k: int) -> jax.Array:
+    return _safe_div(_at_rank(s.cum_rel, k), s.n_rel)
+
+
+def success_at(s: SortedBatch, k: int) -> jax.Array:
+    return (_at_rank(s.cum_rel, k) > 0).astype(jnp.float32)
+
+
+def reciprocal_rank(s: SortedBatch) -> jax.Array:
+    d = s.binrel.shape[-1]
+    any_rel = jnp.sum(s.binrel, axis=-1) > 0
+    first = jnp.argmax(s.binrel, axis=-1).astype(jnp.float32) + 1.0
+    return jnp.where(any_rel, 1.0 / first, 0.0)
+
+
+def r_precision(s: SortedBatch) -> jax.Array:
+    d = s.cum_rel.shape[-1]
+    idx = jnp.clip(s.n_rel.astype(jnp.int32), 1, d) - 1
+    at_r = jnp.take_along_axis(s.cum_rel, idx[:, None], axis=-1)[:, 0]
+    return _safe_div(at_r, s.n_rel)
+
+
+def bpref(s: SortedBatch) -> jax.Array:
+    """trec_eval bpref: judged-only preference measure."""
+    judged_nonrel = s.judged * (1.0 - s.binrel)
+    # judged non-relevant docs ranked strictly above each position (exclusive).
+    nr_above = jnp.cumsum(judged_nonrel, axis=-1) - judged_nonrel
+    r = s.n_rel[:, None]
+    n = s.n_judged_nonrel[:, None]
+    denom = jnp.minimum(r, n)
+    bounded = jnp.minimum(nr_above, r)
+    term = jnp.where(nr_above > 0, 1.0 - _safe_div(bounded, denom), 1.0)
+    total = jnp.sum(term * s.binrel, axis=-1)
+    return _safe_div(total, s.n_rel)
+
+
+def _discounts(d: int) -> jax.Array:
+    return 1.0 / jnp.log2(_ranks(d) + 1.0)
+
+
+def dcg(s: SortedBatch, k: int | None = None) -> jax.Array:
+    """trec_eval DCG: linear gain rel / log2(rank + 1)."""
+    d = s.rel.shape[-1]
+    disc = _discounts(d)
+    gains = jnp.maximum(s.rel, 0.0) * disc  # trec_eval: negative rels gain 0
+    if k is not None:
+        gains = gains * (_ranks(d) <= k).astype(jnp.float32)
+    return jnp.sum(gains, axis=-1)
+
+
+def ideal_dcg(s: SortedBatch, k: int | None = None) -> jax.Array:
+    j = s.ideal_rel.shape[-1]
+    disc = _discounts(j)
+    gains = jnp.maximum(s.ideal_rel, 0.0) * disc
+    if k is not None:
+        gains = gains * (_ranks(j) <= k).astype(jnp.float32)
+    return jnp.sum(gains, axis=-1)
+
+
+def ndcg(s: SortedBatch) -> jax.Array:
+    return _safe_div(dcg(s), ideal_dcg(s))
+
+
+def ndcg_cut(s: SortedBatch, k: int) -> jax.Array:
+    return _safe_div(dcg(s, k), ideal_dcg(s, k))
+
+
+def iprec_at_recall(s: SortedBatch, level: float) -> jax.Array:
+    """Interpolated precision at a recall level (11-pt PR curve point)."""
+    d = s.cum_rel.shape[-1]
+    prec = s.cum_rel / _ranks(d)
+    # Reverse running max: best precision achievable at this rank or deeper.
+    rev_max = jnp.flip(
+        jax.lax.cummax(jnp.flip(prec, axis=-1), axis=prec.ndim - 1), axis=-1)
+    target = jnp.ceil(level * s.n_rel)[:, None]
+    # First rank whose relevant-count reaches the target.
+    reached = s.cum_rel >= jnp.maximum(target, 0.0)
+    any_reach = jnp.any(reached, axis=-1)
+    first_idx = jnp.argmax(reached, axis=-1)
+    val = jnp.take_along_axis(rev_max, first_idx[:, None], axis=-1)[:, 0]
+    val = jnp.where(any_reach, val, 0.0)
+    return jnp.where(s.n_rel > 0, val, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Measure-set plumbing.
+# ---------------------------------------------------------------------------
+
+
+def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...]], ...]:
+    """Normalize pytrec_eval-style measure strings into (family, params).
+
+    Accepts family names (``"ndcg_cut"`` → all default cutoffs), explicit
+    params (``"P.5,10"``), and pytrec_eval output-style ids (``"P_5"``,
+    ``"ndcg_cut_10"``).
+    """
+    out = []
+    for m in sorted(set(measures)):
+        if m in ("map", "ndcg", "recip_rank", "Rprec", "bpref", "num_ret",
+                 "num_rel", "num_rel_ret"):
+            out.append((m, ()))
+            continue
+        if "." in m:
+            fam, _, arg = m.partition(".")
+            params = tuple(float(x) for x in arg.split(","))
+        else:
+            fam, params = m, None
+            # Output-style "P_5" / "ndcg_cut_10" / "iprec_at_recall_0.10".
+            for known in ("ndcg_cut", "map_cut", "iprec_at_recall", "P",
+                          "recall", "success"):
+                if m.startswith(known + "_"):
+                    fam = known
+                    params = (float(m[len(known) + 1:]),)
+                    break
+        if fam not in SUPPORTED_MEASURES:
+            raise ValueError(f"unsupported measure: {m!r}")
+        if params is None:
+            if fam == "success":
+                params = tuple(float(k) for k in SUCCESS_CUTOFFS)
+            elif fam == "iprec_at_recall":
+                params = IPREC_LEVELS
+            else:
+                params = tuple(float(k) for k in DEFAULT_CUTOFFS)
+        out.append((fam, params))
+    return tuple(sorted(out))
+
+
+def measure_keys(measures: Sequence[str]) -> Tuple[str, ...]:
+    """The pytrec_eval-style output keys produced for a measure set."""
+    keys = []
+    for fam, params in parse_measures(measures):
+        if not params:
+            keys.append(fam)
+        elif fam == "iprec_at_recall":
+            keys.extend(f"{fam}_{p:.2f}" for p in params)
+        else:
+            keys.extend(f"{fam}_{int(p)}" for p in params)
+    return tuple(keys)
+
+
+def compute_measures(
+    batch: EvalBatch,
+    measures: Tuple[Tuple[str, Tuple[float, ...]], ...],
+    relevance_level: float = 1.0,
+) -> Dict[str, jax.Array]:
+    """Compute every requested measure for every query in the batch.
+
+    ``measures`` must be the output of :func:`parse_measures` (hashable, so
+    this function can be jitted with ``static_argnums``).  Returns a dict of
+    pytrec_eval-style keys to ``[Q]`` float32 vectors.
+    """
+    s = sort_batch(batch, relevance_level)
+    out: Dict[str, jax.Array] = {}
+    for fam, params in measures:
+        if fam == "map":
+            out["map"] = average_precision(s)
+        elif fam == "ndcg":
+            out["ndcg"] = ndcg(s)
+        elif fam == "recip_rank":
+            out["recip_rank"] = reciprocal_rank(s)
+        elif fam == "Rprec":
+            out["Rprec"] = r_precision(s)
+        elif fam == "bpref":
+            out["bpref"] = bpref(s)
+        elif fam == "num_ret":
+            out["num_ret"] = s.n_ret
+        elif fam == "num_rel":
+            out["num_rel"] = s.n_rel
+        elif fam == "num_rel_ret":
+            out["num_rel_ret"] = s.cum_rel[:, -1]
+        elif fam == "P":
+            for k in params:
+                out[f"P_{int(k)}"] = precision_at(s, int(k))
+        elif fam == "recall":
+            for k in params:
+                out[f"recall_{int(k)}"] = recall_at(s, int(k))
+        elif fam == "success":
+            for k in params:
+                out[f"success_{int(k)}"] = success_at(s, int(k))
+        elif fam == "ndcg_cut":
+            for k in params:
+                out[f"ndcg_cut_{int(k)}"] = ndcg_cut(s, int(k))
+        elif fam == "map_cut":
+            for k in params:
+                out[f"map_cut_{int(k)}"] = map_cut(s, int(k))
+        elif fam == "iprec_at_recall":
+            for lv in params:
+                out[f"iprec_at_recall_{lv:.2f}"] = iprec_at_recall(s, lv)
+        else:  # pragma: no cover - guarded by parse_measures
+            raise ValueError(fam)
+    zero = jnp.zeros_like(s.n_rel)
+    qm = s.query_mask
+    return {k: jnp.where(qm, v, zero) for k, v in out.items()}
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def compute_measures_jit(batch, measures, relevance_level=1.0):
+    return compute_measures(batch, measures, relevance_level)
+
+
+def aggregate(per_query: Dict[str, jax.Array], query_mask: jax.Array) -> Dict[str, jax.Array]:
+    """Mean over real queries (trec_eval 'all' row)."""
+    n = jnp.maximum(jnp.sum(query_mask.astype(jnp.float32)), 1.0)
+    return {k: jnp.sum(v * query_mask, axis=-1) / n for k, v in per_query.items()}
+
+
+# ---------------------------------------------------------------------------
+# Dense entry point for in-loop evaluation (no dicts, pure device).
+# ---------------------------------------------------------------------------
+
+
+def batch_from_dense(
+    scores: jax.Array,
+    rel: jax.Array,
+    mask: jax.Array | None = None,
+    judged: jax.Array | None = None,
+    query_mask: jax.Array | None = None,
+    tiebreak: jax.Array | None = None,
+    relevance_level: float = 1.0,
+) -> EvalBatch:
+    """Build an EvalBatch from dense score/relevance tensors.
+
+    Assumes the candidate set *is* the judged set (standard for in-loop model
+    evaluation where every candidate has a known label).  The ideal ranking is
+    derived by sorting ``rel`` — correct because all judged docs are present.
+    """
+    q, d = scores.shape
+    if mask is None:
+        mask = jnp.ones((q, d), dtype=bool)
+    if judged is None:
+        judged = mask
+    if query_mask is None:
+        query_mask = jnp.ones((q,), dtype=bool)
+    if tiebreak is None:
+        tiebreak = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), (q, d))
+    # unjudged docs are non-relevant by definition (trec_eval): zero their
+    # rel so every engine sees consistent inputs
+    rel = rel.astype(jnp.float32) * mask * judged
+    ideal = -jnp.sort(-rel, axis=-1)
+    binrel = (rel >= relevance_level) & mask & (judged > 0)
+    n_rel = jnp.sum(binrel.astype(jnp.float32), axis=-1)
+    n_nonrel = jnp.sum((judged & mask).astype(jnp.float32), axis=-1) - n_rel
+    return EvalBatch(
+        scores=scores.astype(jnp.float32),
+        tiebreak=tiebreak,
+        rel=rel,
+        judged=judged,
+        mask=mask,
+        ideal_rel=ideal,
+        n_rel=n_rel,
+        n_judged_nonrel=n_nonrel,
+        query_mask=query_mask,
+    )

@@ -1,0 +1,195 @@
+"""Rank-reduction evaluation: measures from judged-document ranks only.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf iteration C).  Every
+trec_eval measure is a function of (a) the *ranks of the judged documents*
+(≤ J per query, typically ≪ D) and (b) per-query scalars (R, N, n_ret).
+Unjudged documents only matter through how many of them outrank each judged
+one.  So instead of sorting the D-deep ranking and running full-width
+cumulative passes (O(D log D) compute, many HBM passes — what both trec_eval
+and the batched `core.measures` engine do), compute
+
+    rank_j = 1 + Σ_d  mask_d · [ s_d > s_j  or  (s_d = s_j and tb_d < tb_j) ]
+
+— one fused compare-reduce over the scores (a single HBM read of [Q, D],
+VPU-only, trec_eval tie semantics exact) — and reconstruct every measure
+from the [Q, J] rank matrix with O(J²) pairwise work.
+
+Exactness: verified against `core.measures` in tests/test_ranked.py for the
+full measure set, including ties, unretrieved judged docs, and padding.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import measures as M
+
+INF_RANK = 2.0**30  # rank assigned to judged docs not retrieved
+
+
+class RankedBatch(NamedTuple):
+    """Inputs for rank-reduction evaluation (axes: Q queries, D docs in the
+    run, J judged docs per query — all padded)."""
+
+    scores: jax.Array  # [Q, D] f32 — retrieval scores of the run
+    tiebreak: jax.Array  # [Q, D] i32 — trec_eval tie order (smaller wins)
+    mask: jax.Array  # [Q, D] bool — real run entries
+    judged_scores: jax.Array  # [Q, J] f32 — scores of judged docs in the run
+    judged_tiebreak: jax.Array  # [Q, J] i32
+    judged_rel: jax.Array  # [Q, J] f32 — relevance judgments
+    judged_retrieved: jax.Array  # [Q, J] bool — judged doc appears in run
+    judged_mask: jax.Array  # [Q, J] bool — real judged entries
+    ideal_rel: jax.Array  # [Q, J'] f32 — qrel judgments sorted desc (IDCG)
+    n_rel: jax.Array  # [Q] f32
+    n_judged_nonrel: jax.Array  # [Q] f32
+    query_mask: jax.Array  # [Q] bool
+
+
+def from_eval_batch(batch: M.EvalBatch, j: int | None = None) -> RankedBatch:
+    """Build a RankedBatch from a dense EvalBatch (judged docs extracted by
+    relevance-descending top-J; used by tests and the evaluator fast path)."""
+    q, d = batch.scores.shape
+    j = j or batch.ideal_rel.shape[-1]
+    judged_key = jnp.where(batch.judged & batch.mask, 1.0, 0.0)
+    # order judged docs first (stable by index for determinism)
+    _, idx = jax.lax.top_k(judged_key + jnp.linspace(1e-3, 0.0, d)[None, :],
+                           j)
+    take = lambda a: jnp.take_along_axis(a, idx, axis=-1)
+    judged_mask = take(batch.judged & batch.mask)
+    return RankedBatch(
+        scores=batch.scores, tiebreak=batch.tiebreak, mask=batch.mask,
+        judged_scores=take(batch.scores),
+        judged_tiebreak=take(batch.tiebreak),
+        judged_rel=take(batch.rel) * judged_mask,
+        judged_retrieved=judged_mask,
+        judged_mask=judged_mask,
+        ideal_rel=batch.ideal_rel,
+        n_rel=batch.n_rel, n_judged_nonrel=batch.n_judged_nonrel,
+        query_mask=batch.query_mask)
+
+
+def judged_ranks(rb: RankedBatch) -> jax.Array:
+    """[Q, J] 1-based ranks of judged docs in the run (INF if unretrieved).
+
+    The [Q, J, D] comparison never materializes: XLA fuses the selects into
+    the reduction, so the scores tensor is read once.
+    """
+    s = rb.scores[:, None, :]
+    tb = rb.tiebreak[:, None, :]
+    js = rb.judged_scores[:, :, None]
+    jtb = rb.judged_tiebreak[:, :, None]
+    above = (s > js) | ((s == js) & (tb < jtb))
+    above = above & rb.mask[:, None, :]
+    ranks = 1.0 + jnp.sum(above, axis=-1, dtype=jnp.float32)
+    return jnp.where(rb.judged_retrieved, ranks, INF_RANK)
+
+
+def compute_measures_ranked(
+    rb: RankedBatch,
+    measures: Tuple[Tuple[str, Tuple[float, ...]], ...],
+    relevance_level: float = 1.0,
+) -> Dict[str, jax.Array]:
+    """Same contract as measures.compute_measures, via rank reduction."""
+    ranks = judged_ranks(rb)  # [Q, J]
+    jm = rb.judged_mask.astype(jnp.float32)
+    retrieved = rb.judged_retrieved.astype(jnp.float32) * jm
+    rel = (rb.judged_rel >= relevance_level).astype(jnp.float32) * jm
+    rel_ret = rel * retrieved
+    nonrel_ret = (1.0 - rel) * retrieved  # judged non-relevant, retrieved
+    gains = jnp.maximum(rb.judged_rel, 0.0) * jm
+
+    n_ret = jnp.sum(rb.mask.astype(jnp.float32), axis=-1)
+    r = rb.n_rel
+    inv_r = jnp.where(r > 0, 1.0 / jnp.maximum(r, 1e-30), 0.0)
+
+    # pairwise [Q, J, J]: how many judged-X docs rank at-or-above each doc
+    le = (ranks[:, :, None] <= ranks[:, None, :]).astype(jnp.float32)
+    lt = (ranks[:, :, None] < ranks[:, None, :]).astype(jnp.float32)
+    # cnt_i = #rel-retrieved docs with rank ≤ rank_i (includes self if rel)
+    cnt = jnp.einsum("qj,qji->qi", rel_ret, le)
+    nonrel_above = jnp.einsum("qj,qji->qi", nonrel_ret, lt)
+
+    finite = (ranks < INF_RANK).astype(jnp.float32)
+    prec_at_i = jnp.where(finite > 0, cnt / jnp.maximum(ranks, 1.0), 0.0)
+
+    out: Dict[str, jax.Array] = {}
+
+    def rel_in_top(k):
+        return jnp.sum(rel_ret * (ranks <= k), axis=-1)
+
+    for fam, params in measures:
+        if fam == "map":
+            ap = jnp.sum(rel_ret * prec_at_i, axis=-1)
+            out["map"] = ap * inv_r
+        elif fam == "map_cut":
+            for k in params:
+                apk = jnp.sum(rel_ret * prec_at_i * (ranks <= k), axis=-1)
+                out[f"map_cut_{int(k)}"] = apk * inv_r
+        elif fam == "ndcg":
+            dcg = jnp.sum(gains * retrieved
+                          / jnp.log2(jnp.minimum(ranks, INF_RANK) + 1.0),
+                          axis=-1)
+            idcg = _ideal_dcg(rb, None)
+            out["ndcg"] = jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-30),
+                                    0.0)
+        elif fam == "ndcg_cut":
+            for k in params:
+                dcg = jnp.sum(gains * retrieved * (ranks <= k)
+                              / jnp.log2(jnp.minimum(ranks, INF_RANK) + 1.0),
+                              axis=-1)
+                idcg = _ideal_dcg(rb, int(k))
+                out[f"ndcg_cut_{int(k)}"] = jnp.where(
+                    idcg > 0, dcg / jnp.maximum(idcg, 1e-30), 0.0)
+        elif fam == "P":
+            for k in params:
+                out[f"P_{int(k)}"] = rel_in_top(k) / float(k)
+        elif fam == "recall":
+            for k in params:
+                out[f"recall_{int(k)}"] = rel_in_top(k) * inv_r
+        elif fam == "success":
+            for k in params:
+                out[f"success_{int(k)}"] = (rel_in_top(k) > 0).astype(
+                    jnp.float32)
+        elif fam == "recip_rank":
+            first = jnp.min(jnp.where(rel_ret > 0, ranks, INF_RANK), axis=-1)
+            out["recip_rank"] = jnp.where(first < INF_RANK, 1.0 / first, 0.0)
+        elif fam == "Rprec":
+            out["Rprec"] = jnp.sum(rel_ret * (ranks <= r[:, None]), axis=-1
+                                   ) * inv_r
+        elif fam == "bpref":
+            denom = jnp.maximum(jnp.minimum(r, rb.n_judged_nonrel), 1e-30)
+            term = jnp.where(
+                nonrel_above > 0,
+                1.0 - jnp.minimum(nonrel_above, r[:, None]) / denom[:, None],
+                1.0)
+            out["bpref"] = jnp.sum(term * rel_ret, axis=-1) * inv_r
+        elif fam == "iprec_at_recall":
+            for lv in params:
+                target = jnp.ceil(lv * r)[:, None]
+                ok = (cnt >= jnp.maximum(target, 0.0)) & (rel_ret > 0)
+                val = jnp.max(jnp.where(ok, prec_at_i, 0.0), axis=-1)
+                out[f"iprec_at_recall_{lv:.2f}"] = jnp.where(r > 0, val, 0.0)
+        elif fam == "num_ret":
+            out["num_ret"] = n_ret
+        elif fam == "num_rel":
+            out["num_rel"] = r
+        elif fam == "num_rel_ret":
+            out["num_rel_ret"] = jnp.sum(rel_ret, axis=-1)
+        else:  # pragma: no cover
+            raise ValueError(fam)
+    zero = jnp.zeros_like(r)
+    return {k: jnp.where(rb.query_mask, v, zero) for k, v in out.items()}
+
+
+def _ideal_dcg(rb: RankedBatch, k: int | None) -> jax.Array:
+    """Ideal DCG from the full qrel judgments (already sorted descending)."""
+    ideal = jnp.maximum(rb.ideal_rel, 0.0)
+    j = ideal.shape[-1]
+    ranks = jnp.arange(1, j + 1, dtype=jnp.float32)
+    disc = 1.0 / jnp.log2(ranks + 1.0)
+    if k is not None:
+        disc = disc * (ranks <= k)
+    return jnp.sum(ideal * disc, axis=-1)

@@ -1,0 +1,76 @@
+"""trec_eval ranking semantics on device.
+
+trec_eval ignores the order of documents in the run file: documents are ranked
+by decreasing retrieval score, and ties are broken by the document identifier
+(descending lexicographic order — the document with the *larger* docno wins the
+tie).  pytrec_eval mimics this exactly; so do we.
+
+On device we cannot compare strings, so the evaluator precomputes, per query, a
+``tiebreak`` integer for every retrieved document: the rank of its docno in
+*descending* lexicographic order (0 = lexicographically largest = wins ties).
+Purely-device pipelines (in-loop evaluation of model scores) use the candidate
+index as the tiebreak, which is deterministic and documented.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Large sentinel that pushes padded entries to the end of the sort.
+_PAD_TIEBREAK = jnp.iinfo(jnp.int32).max
+
+
+def rank_sort(scores, tiebreak, mask, *payload):
+    """Sort along the last axis by (-score, tiebreak asc); padding goes last.
+
+    Args:
+      scores:   [..., D] float array of retrieval scores.
+      tiebreak: [..., D] int32 array; smaller value wins ties (see module doc).
+      mask:     [..., D] bool; False entries are padding and sort to the end.
+      *payload: arrays of the same shape to carry through the sort.
+
+    Returns:
+      Tuple of (sorted_mask, *sorted_payload).
+    """
+    neg = jnp.where(mask, -scores.astype(jnp.float32), jnp.inf)
+    tb = jnp.where(mask, tiebreak.astype(jnp.int32), _PAD_TIEBREAK)
+    operands = (neg, tb, mask) + tuple(payload)
+    out = lax.sort(operands, dimension=-1, num_keys=2, is_stable=False)
+    return out[2:]
+
+
+def ranks_of(scores, tiebreak, mask):
+    """1-based rank of every entry under trec_eval ordering (padding gets D)."""
+    d = scores.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), scores.shape)
+    (_, sorted_idx) = rank_sort(scores, tiebreak, mask, idx)
+    # Scatter: position p in sorted order means rank p+1 for doc sorted_idx[p].
+    pos = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), scores.shape)
+    ranks = jnp.zeros(scores.shape, dtype=jnp.int32)
+    ranks = jnp.put_along_axis(ranks, sorted_idx, pos + 1, axis=-1, inplace=False)
+    return ranks
+
+
+def gold_rank(scores, gold_index, tiebreak=None):
+    """Rank (1-based) of ``gold_index`` in a score vector, trec_eval tie rules.
+
+    Used by in-loop LM/recsys evaluation: the rank of the gold token/item in the
+    model's score distribution, without sorting the whole vocabulary.
+
+    A document ranks above gold if its score is strictly greater, or equal with
+    a smaller tiebreak value.  Default tiebreak is the index itself.
+    """
+    d = scores.shape[-1]
+    idx = jnp.arange(d, dtype=jnp.int32)
+    if tiebreak is None:
+        tiebreak = idx
+    gold_score = jnp.take_along_axis(scores, gold_index[..., None], axis=-1)
+    gold_tb = jnp.take_along_axis(
+        jnp.broadcast_to(tiebreak, scores.shape), gold_index[..., None], axis=-1
+    )
+    above = (scores > gold_score) | (
+        (scores == gold_score) & (tiebreak < gold_tb)
+    )
+    return jnp.sum(above, axis=-1).astype(jnp.int32) + 1

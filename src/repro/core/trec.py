@@ -1,0 +1,74 @@
+"""TREC run / qrel file formats.
+
+These exist for interoperability *and* as the serialization layer of the
+serialize-invoke-parse baseline (the workflow the paper measures against).
+
+Formats (whitespace separated):
+  qrel:  ``qid  iter  docno  rel``
+  run:   ``qid  Q0    docno  rank  score  tag``
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, TextIO
+
+
+def parse_qrel(fh: TextIO) -> Dict[str, Dict[str, int]]:
+    qrel: Dict[str, Dict[str, int]] = {}
+    for line in fh:
+        parts = line.split()
+        if not parts:
+            continue
+        if len(parts) != 4:
+            raise ValueError(f"malformed qrel line: {line!r}")
+        qid, _, docno, rel = parts
+        qrel.setdefault(qid, {})[docno] = int(rel)
+    return qrel
+
+
+def parse_run(fh: TextIO) -> Dict[str, Dict[str, float]]:
+    run: Dict[str, Dict[str, float]] = {}
+    for line in fh:
+        parts = line.split()
+        if not parts:
+            continue
+        if len(parts) != 6:
+            raise ValueError(f"malformed run line: {line!r}")
+        qid, _, docno, _rank, score, _tag = parts
+        run.setdefault(qid, {})[docno] = float(score)
+    return run
+
+
+def write_qrel(fh: TextIO, qrel: Mapping[str, Mapping[str, int]]) -> None:
+    for qid, docs in qrel.items():
+        for docno, rel in docs.items():
+            fh.write(f"{qid} 0 {docno} {int(rel)}\n")
+
+
+def write_run(fh: TextIO, run: Mapping[str, Mapping[str, float]],
+              tag: str = "repro") -> None:
+    # Like the paper's benchmark setup: written WITHOUT sorting — the
+    # evaluator sorts internally, so rank fields are positional placeholders.
+    for qid, docs in run.items():
+        for rank, (docno, score) in enumerate(docs.items()):
+            fh.write(f"{qid} Q0 {docno} {rank} {score:.6f} {tag}\n")
+
+
+def load_qrel(path: str) -> Dict[str, Dict[str, int]]:
+    with open(path) as fh:
+        return parse_qrel(fh)
+
+
+def load_run(path: str) -> Dict[str, Dict[str, float]]:
+    with open(path) as fh:
+        return parse_run(fh)
+
+
+def save_qrel(path: str, qrel) -> None:
+    with open(path, "w") as fh:
+        write_qrel(fh, qrel)
+
+
+def save_run(path: str, run, tag: str = "repro") -> None:
+    with open(path, "w") as fh:
+        write_run(fh, run, tag)

@@ -1,0 +1,1 @@
+"""Synthetic data pipelines (all substrates built, nothing stubbed)."""

@@ -1,0 +1,134 @@
+"""Per-family sharding rules (PartitionSpecs) for the production mesh.
+
+Axis convention (see launch/mesh.py):
+  * ``data`` (+ ``pod`` when multi-pod) — batch / query axes (DP).
+  * ``model`` — tensor-parallel axis: attention heads, FFN hidden, vocab,
+    experts (EP), embedding-table rows, candidate sets, KV-cache sequence.
+
+Models never hardcode specs; they receive a ``Sharding`` object and call
+:func:`constrain`, which is a no-op when running unsharded (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, spec: Optional[P]):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMSharding:
+    """Megatron-style TP + DP (+ optional FSDP for expert weights)."""
+
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_experts: bool = False
+    # FSDP materialization: "gather" weights (train) or "activation"
+    # (decode: gather the few tokens instead — see models/moe.py).
+    moe_fsdp_mode: str = "gather"
+    # decode: shard the KV-cache sequence axis over `model` (flash-decoding).
+    shard_cache_seq: bool = True
+
+    @property
+    def batch(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    # --- activations ---
+    def act(self):  # [B, S, D]
+        return P(self.batch, None, None)
+
+    def act_heads(self):  # [B, S, H, hd] — heads TP-sharded
+        return P(self.batch, None, self.model_axis, None)
+
+    def logits(self):  # [B, S, V] — vocab TP-sharded
+        return P(self.batch, None, self.model_axis)
+
+    def cache(self):  # [B, KV, S, hd]
+        seq = self.model_axis if self.shard_cache_seq else None
+        return P(self.batch, None, seq, None)
+
+    # --- parameters ---
+    def p_embed(self):  # [V, D]
+        return P(self.model_axis, None)
+
+    def p_attn_in(self):  # [D, H*hd] — column parallel
+        return P(None, self.model_axis)
+
+    def p_attn_out(self):  # [H*hd, D] — row parallel
+        return P(self.model_axis, None)
+
+    def p_ffn_in(self):  # [D, F]
+        return P(None, self.model_axis)
+
+    def p_ffn_out(self):  # [F, D]
+        return P(self.model_axis, None)
+
+    def p_norm(self):
+        return P(None)
+
+    def p_router(self):  # [D, E]
+        return P()
+
+    def p_expert_in(self):  # [E, D, F] — EP over model (+ FSDP over data)
+        fsdp = self.data_axes[-1] if self.fsdp_experts else None
+        return P(self.model_axis, None, fsdp)
+
+    def p_expert_out(self):  # [E, F, D]
+        fsdp = self.data_axes[-1] if self.fsdp_experts else None
+        return P(self.model_axis, fsdp, None)
+
+    def fsdp_axis(self) -> Optional[str]:
+        return self.data_axes[-1] if self.fsdp_experts else None
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNSharding:
+    """Edges sharded over the full mesh; small feature dim replicated."""
+
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    def edges(self):  # [E] / [E, F]
+        return P((*self.data_axes, self.model_axis))
+
+    def nodes(self):  # [N, F] — nodes over data
+        return P(self.batch, None)
+
+    @property
+    def batch(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def p_weight(self):
+        return P(None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysSharding:
+    """Embedding tables row-sharded over `model` (vocab-parallel); DP batch."""
+
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def batch(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def p_table(self):  # [V_total, E]
+        return P(self.model_axis, None)
+
+    def p_dense(self):
+        return P(None, None)
+
+    def act(self):  # [B, ...]
+        return P(self.batch)
+
+    def candidates(self):  # [N_cand, E] — candidate set over model
+        return P(self.model_axis, None)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``topk``            — blocked top-K over the document axis (ranking sort).
+* ``fused_measures``  — every trec_eval measure in one VMEM pass.
+* ``embedding_bag``   — scalar-prefetch gather + segment-sum (recsys tables).
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py``.  On this CPU container they run in interpret mode; on TPU set
+``ops.INTERPRET = False``.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,74 @@
+"""Gather-free bitonic sorting network for Pallas TPU kernels.
+
+trec_eval's hot loop is a qsort over (score, docno); on TPU the equivalent is
+a vectorized sorting network.  Every compare-exchange stage is expressed as a
+reshape + min/max/select over contiguous sub-blocks — no gathers — so it maps
+onto the VPU's 8×128 lanes.
+
+Total order ("precedes"): x before y  iff  x.value > y.value, ties broken by
+smaller index first — exactly trec_eval's score-desc / tiebreak-asc ranking
+(see ``core.sorting``).
+
+All lengths must be powers of two (callers pad with -inf / INT32_MAX).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _compare_exchange(lo_v, lo_i, hi_v, hi_i, desc):
+    """One compare-exchange; ``desc`` True reverses the segment direction."""
+    lo_first = (lo_v > hi_v) | ((lo_v == hi_v) & (lo_i < hi_i))
+    hi_first = (hi_v > lo_v) | ((hi_v == lo_v) & (hi_i < lo_i))
+    swap = jnp.where(desc, lo_first, hi_first)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+    new_lo_i = jnp.where(swap, hi_i, lo_i)
+    new_hi_i = jnp.where(swap, lo_i, hi_i)
+    return new_lo_v, new_lo_i, new_hi_v, new_hi_i
+
+
+def _stage(v, i, j, k):
+    """Compare-exchange at pair-distance ``j`` within segments of size ``k``."""
+    n = v.shape[-1]
+    g = n // (2 * j)
+    vr = v.reshape(g, 2, j)
+    ir = i.reshape(g, 2, j)
+    # Each group of 2j consecutive elements pairs element b with element b+j;
+    # the segment direction flips with bit log2(k) of the element index.
+    grp = (jnp.arange(g, dtype=jnp.int32) * (2 * j)) // k
+    desc = (grp % 2 == 1)[:, None]
+    lo_v, lo_i, hi_v, hi_i = _compare_exchange(
+        vr[:, 0, :], ir[:, 0, :], vr[:, 1, :], ir[:, 1, :], desc
+    )
+    v_out = jnp.stack([lo_v, hi_v], axis=1).reshape(n)
+    i_out = jnp.stack([lo_i, hi_i], axis=1).reshape(n)
+    return v_out, i_out
+
+
+def sort_desc(v, i):
+    """Full bitonic sort of (values, indices) into precedes order."""
+    n = v.shape[-1]
+    assert n & (n - 1) == 0, "bitonic sort needs a power-of-two length"
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            v, i = _stage(v, i, j, k)
+            j //= 2
+        k *= 2
+    return v, i
+
+
+def merge_desc(v, i):
+    """Bitonic merge: input must be bitonic wrt the precedes order
+    (e.g. the concatenation of a precedes-sorted and a reversed
+    precedes-sorted array); output is fully precedes-sorted."""
+    n = v.shape[-1]
+    assert n & (n - 1) == 0
+    j = n // 2
+    while j >= 1:
+        v, i = _stage(v, i, j, 2 * n)  # k=2n → every direction ascending
+        j //= 2
+    return v, i

@@ -1,0 +1,88 @@
+"""EmbeddingBag Pallas TPU kernel: scalar-prefetch gather + segment-sum.
+
+JAX has no native EmbeddingBag; the recsys substrate builds one from
+``jnp.take`` + ``segment_sum`` (see ``models/embedding.py``).  That reference
+path materializes the full [L, E] gathered matrix in HBM before reducing.
+This kernel instead streams table rows through VMEM and accumulates directly
+into the output bag, the classic TPU sparse pattern:
+
+* lookup indices and bag (segment) ids ride in scalar-prefetch memory (SMEM),
+  available *before* the grid step runs, so the BlockSpec ``index_map`` can
+  select which table row block to DMA next — data-dependent addressing without
+  a gather op;
+* lookups are pre-sorted by bag id; consecutive grid steps that land in the
+  same output bag revisit the same output block, so the accumulation is a
+  VMEM add (first visit initializes, others accumulate);
+* every bag is seeded with one zero-weight dummy lookup so empty bags are
+  still written (Pallas outputs are undefined unless written).
+
+Weights make this a weighted bag (mean combining divides by count outside).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, seg_ref, w_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    row = table_ref[0, :] * w_ref[i]
+    is_first = jnp.logical_or(i == 0, seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_first)
+    def _init():
+        out_ref[0, :] = row
+
+    @pl.when(jnp.logical_not(is_first))
+    def _acc():
+        out_ref[0, :] = out_ref[0, :] + row
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
+                  n_bags: int, weights: jax.Array | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """Weighted sum of table rows per bag.
+
+    Args:
+      table:       [V, E] embedding table (HBM-resident; rows DMA'd on demand).
+      indices:     [L] int32 row ids, **sorted by segment_ids**.
+      segment_ids: [L] int32 bag ids, sorted ascending, each < n_bags.
+      n_bags:      number of output bags B.
+      weights:     optional [L] f32 per-lookup weights (default 1.0).
+
+    Returns: [B, E] f32.
+    """
+    v, e = table.shape
+    l = indices.shape[0]
+    if weights is None:
+        weights = jnp.ones((l,), dtype=table.dtype)
+    # Seed every bag with a zero-weight row-0 lookup so empty bags are zeroed.
+    seed_idx = jnp.zeros((n_bags,), jnp.int32)
+    seed_seg = jnp.arange(n_bags, dtype=jnp.int32)
+    seed_w = jnp.zeros((n_bags,), weights.dtype)
+    all_idx = jnp.concatenate([seed_idx, indices.astype(jnp.int32)])
+    all_seg = jnp.concatenate([seed_seg, segment_ids.astype(jnp.int32)])
+    all_w = jnp.concatenate([seed_w, weights])
+    order = jnp.argsort(all_seg, stable=True)
+    all_idx, all_seg, all_w = all_idx[order], all_seg[order], all_w[order]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(l + n_bags,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, idx, seg, w: (idx[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, idx, seg, w: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, e), table.dtype),
+        interpret=interpret,
+    )(all_idx, all_seg, all_w, table)

@@ -1,0 +1,154 @@
+"""Fused one-pass measure kernel (pytrec_eval's C loop, TPU-native).
+
+trec_eval computes every requested measure in a single walk over the sorted
+ranking.  A naive JAX translation materializes a separate [Q, D] intermediate
+per measure family (cumsum for AP, another for DCG, another for bpref, ...) —
+each one an HBM round trip.  This kernel keeps a [block_q, D] tile of the
+rank-sorted relevance in VMEM and computes *all* measures in one visit:
+cumulative sums are log2(D) shifted adds in VMEM, cutoff reads are static
+slices, and only a [block_q, 64] measure block leaves the core.
+
+Inputs (already rank-sorted by score desc / tiebreak asc — see core.sorting
+or the top-K kernel):
+  rel      [Q, D] f32 — judgment of doc at each rank (0 unjudged/padding)
+  judged   [Q, D] f32 — 1.0 where the doc is judged
+  scalars  [Q, 16] f32 — col 0: R (n_rel), 1: judged-nonrel count,
+           2: full-ranking ideal DCG, 3..11: ideal DCG at the 9 cutoffs.
+
+Output: [Q, 64] f32, columns per :data:`COLUMNS`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CUTOFFS = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
+SUCCESS_CUTOFFS = (1, 5, 10)
+
+COLUMNS = (
+    ["map", "recip_rank", "ndcg", "bpref", "num_rel_ret", "Rprec"]
+    + [f"P_{k}" for k in CUTOFFS]
+    + [f"recall_{k}" for k in CUTOFFS]
+    + [f"ndcg_cut_{k}" for k in CUTOFFS]
+    + [f"map_cut_{k}" for k in CUTOFFS]
+    + [f"success_{k}" for k in SUCCESS_CUTOFFS]
+)
+OUT_WIDTH = 64  # lane-padded; len(COLUMNS) == 45
+
+
+def _cumsum_lanes(x):
+    """Inclusive cumsum along the last axis via log2(D) shifted adds.
+
+    Shift-by-pad-and-slice only (static shapes, no gather) — each step is a
+    full-tile VPU add, so the whole scan stays in VMEM.
+    """
+    n = x.shape[-1]
+    sh = 1
+    while sh < n:
+        shifted = jnp.pad(x, ((0, 0), (sh, 0)))[:, :n]
+        x = x + shifted
+        sh *= 2
+    return x
+
+
+def _at(cum, k):
+    d = cum.shape[-1]
+    return cum[:, min(k, d) - 1]
+
+
+def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
+    rel = rel_ref[...]
+    judged = judged_ref[...]
+    bq, d = rel.shape
+    scal = scal_ref[...]
+    n_rel = scal[:, 0]
+    n_nonrel = scal[:, 1]
+    idcg_full = scal[:, 2]
+
+    ranks = jax.lax.broadcasted_iota(jnp.float32, (bq, d), 1) + 1.0
+    binrel = jnp.where(rel >= relevance_level, 1.0, 0.0)
+    cum = _cumsum_lanes(binrel)
+    prec = cum / ranks
+
+    inv_r = jnp.where(n_rel > 0, 1.0 / jnp.maximum(n_rel, 1e-30), 0.0)
+
+    # -- AP (+ cutoffs) ------------------------------------------------------
+    ap_cum = _cumsum_lanes(binrel * prec)
+    # -- DCG (+ cutoffs), linear trec_eval gain ------------------------------
+    gains = jnp.maximum(rel, 0.0) / (jnp.log2(ranks + 1.0))
+    dcg_cum = _cumsum_lanes(gains)
+    # -- bpref ---------------------------------------------------------------
+    jn = judged * (1.0 - binrel)
+    nr_above = _cumsum_lanes(jn) - jn
+    bpref_den = jnp.maximum(jnp.minimum(n_rel, n_nonrel), 1e-30)[:, None]
+    bterm = jnp.where(
+        nr_above > 0,
+        1.0 - jnp.minimum(nr_above, n_rel[:, None]) / bpref_den,
+        1.0,
+    )
+    bpref_v = jnp.sum(bterm * binrel, axis=-1) * inv_r
+    # -- reciprocal rank -----------------------------------------------------
+    num_rel_ret = cum[:, -1]
+    any_rel = num_rel_ret > 0
+    first_rank = 1.0 + jnp.sum(jnp.where(cum == 0, 1.0, 0.0), axis=-1)
+    rr = jnp.where(any_rel, 1.0 / first_rank, 0.0)
+    # -- R-precision (dynamic per-row rank R) --------------------------------
+    within_r = jnp.where(ranks <= n_rel[:, None], 1.0, 0.0)
+    rel_at_r = jnp.sum(binrel * within_r, axis=-1)
+    rprec = rel_at_r * inv_r
+
+    cols = [
+        ap_cum[:, -1] * inv_r,
+        rr,
+        jnp.where(idcg_full > 0, dcg_cum[:, -1] / jnp.maximum(idcg_full, 1e-30), 0.0),
+        bpref_v,
+        num_rel_ret,
+        rprec,
+    ]
+    for k in CUTOFFS:
+        cols.append(_at(cum, k) / float(k))
+    for k in CUTOFFS:
+        cols.append(_at(cum, k) * inv_r)
+    for j, k in enumerate(CUTOFFS):
+        idcg_k = scal[:, 3 + j]
+        cols.append(jnp.where(idcg_k > 0, _at(dcg_cum, k) / jnp.maximum(idcg_k, 1e-30), 0.0))
+    for k in CUTOFFS:
+        cols.append(_at(ap_cum, k) * inv_r)
+    for k in SUCCESS_CUTOFFS:
+        cols.append(jnp.where(_at(cum, k) > 0, 1.0, 0.0))
+
+    out = jnp.stack(cols, axis=-1)  # [bq, 45]
+    out = jnp.pad(out, ((0, 0), (0, OUT_WIDTH - out.shape[-1])))
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "relevance_level",
+                                             "interpret"))
+def fused_measures(rel_sorted, judged_sorted, scalars, block_q: int = 8,
+                   relevance_level: float = 1.0, interpret: bool = True):
+    """All 45 trec_eval measures in one VMEM pass.  Returns [Q, 64] f32."""
+    q, d = rel_sorted.shape
+    q_pad = ((q + block_q - 1) // block_q) * block_q
+    if q_pad != q:
+        pad = ((0, q_pad - q), (0, 0))
+        rel_sorted = jnp.pad(rel_sorted, pad)
+        judged_sorted = jnp.pad(judged_sorted, pad)
+        scalars = jnp.pad(scalars, pad)
+    kern = functools.partial(_kernel, relevance_level=relevance_level)
+    out = pl.pallas_call(
+        kern,
+        grid=(q_pad // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, OUT_WIDTH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, OUT_WIDTH), jnp.float32),
+        interpret=interpret,
+    )(rel_sorted, judged_sorted, scalars)
+    return out[:q]

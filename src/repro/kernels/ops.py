@@ -1,0 +1,79 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True everywhere (this container is CPU-only); on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` or pass
+``interpret=False``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import measures as M
+from repro.kernels import fused_measures as _fm
+from repro.kernels import topk as _topk
+from repro.kernels import embedding_bag as _eb
+
+INTERPRET = True
+
+FUSED_COLUMNS: Tuple[str, ...] = tuple(_fm.COLUMNS)
+
+
+def topk(scores, k, block_d=None, interpret=None):
+    return _topk.topk(scores, k, block_d=block_d,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def embedding_bag(table, indices, segment_ids, n_bags, weights=None,
+                  interpret=None):
+    return _eb.embedding_bag(
+        table, indices, segment_ids, n_bags, weights=weights,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def fused_measures_cols(rel_sorted, judged_sorted, scalars,
+                        relevance_level=1.0, interpret=None):
+    return _fm.fused_measures(
+        rel_sorted, judged_sorted, scalars,
+        relevance_level=relevance_level,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def make_scalars(n_rel, n_judged_nonrel, ideal_rel):
+    """Pack the per-query scalar block consumed by the fused kernel."""
+    q = n_rel.shape[0]
+    j = ideal_rel.shape[-1]
+    ranks = jnp.arange(1, j + 1, dtype=jnp.float32)
+    disc = 1.0 / jnp.log2(ranks + 1.0)
+    gains = jnp.maximum(ideal_rel, 0.0) * disc
+    idcg_full = jnp.sum(gains, axis=-1)
+    scal = [n_rel, n_judged_nonrel, idcg_full]
+    for k in _fm.CUTOFFS:
+        within = (ranks <= k).astype(jnp.float32)
+        scal.append(jnp.sum(gains * within, axis=-1))
+    out = jnp.stack(scal, axis=-1)  # [Q, 12]
+    return jnp.pad(out, ((0, 0), (0, 16 - out.shape[-1])))
+
+
+def evaluate_fused(batch: M.EvalBatch, relevance_level: float = 1.0,
+                   interpret=None):
+    """EvalBatch → dict of per-query measures via the fused kernel path.
+
+    Sort with the XLA multi-key sort (exact trec_eval order), then one fused
+    VMEM pass for all measures.  This is the optimized beyond-paper engine;
+    `core.measures.compute_measures` is the paper-faithful reference engine.
+    """
+    s = M.sort_batch(batch, relevance_level)
+    scal = make_scalars(batch.n_rel, batch.n_judged_nonrel, batch.ideal_rel)
+    cols = fused_measures_cols(s.rel, s.judged, scal,
+                               relevance_level=relevance_level,
+                               interpret=interpret)
+    qm = batch.query_mask
+    zero = jnp.zeros_like(cols[:, 0])
+    return {
+        name: jnp.where(qm, cols[:, i], zero)
+        for i, name in enumerate(FUSED_COLUMNS)
+    }

@@ -1,0 +1,88 @@
+"""Architecture registry: every assigned arch is a selectable config.
+
+Each ``configs/<id>.py`` exposes ``ARCH: ArchDef``.  An ArchDef knows how to:
+  * build its full (paper-exact) and smoke (reduced) model configs;
+  * produce ShapeDtypeStruct input specs for each of its shapes;
+  * produce abstract parameters (``jax.eval_shape`` of init — no allocation);
+  * produce partition specs for params/inputs/outputs on a mesh;
+  * build the jittable step function (train or serve) for a shape.
+
+The dry-run driver (launch/dryrun.py) consumes exactly this interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    meta: Tuple[Tuple[str, Any], ...] = ()
+    skip_reason: Optional[str] = None  # e.g. long_500k on full attention
+
+    def get(self, key, default=None):
+        return dict(self.meta).get(key, default)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    step_fn: Callable  # positional args matching arg_specs
+    arg_specs: Tuple  # ShapeDtypeStructs (abstract params first)
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str  # lm | gnn | recsys
+    shapes: Dict[str, ShapeSpec]
+    make_config: Callable[[bool], Any]  # (smoke: bool) -> model config
+    # (cfg, shape, mesh|None) -> StepBundle   [mesh None → local smoke step]
+    make_step: Callable[[Any, ShapeSpec, Any], StepBundle]
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> ArchDef:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    # Import for side effect: each module registers its ARCH.
+    from repro.configs import (  # noqa: F401
+        arctic_480b,
+        autoint,
+        gatedgcn,
+        mind,
+        nemotron_4_15b,
+        olmo_1b,
+        phi3_medium_14b,
+        pytrec_paper,
+        qwen3_moe_235b,
+        sasrec,
+        xdeepfm,
+    )

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any device query).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+pure data parallelism (gradient all-reduce crosses DCI, everything else stays
+inside a pod).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over the locally available devices (tests/examples)."""
+    n = jax.device_count()
+    dp = max(n // model_parallel, 1)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

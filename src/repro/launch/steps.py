@@ -1,0 +1,463 @@
+"""Family step builders: jittable train/serve steps with sharding trees.
+
+The paper's technique is woven into every step: ranking metrics are computed
+*inside* the jitted step from the scores that are already device-resident
+(``core.measures`` / ``core.streaming``), so evaluation never crosses the
+host boundary — only scalars do.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import measures as M
+from repro.core import sorting, streaming
+from repro.distributed.sharding import GNNSharding, LMSharding, RecSysSharding
+from repro.launch.api import ShapeSpec, StepBundle
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt_lib
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _replicated_specs(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+SERVE_MEASURES = ("ndcg_cut", "recip_rank", "success")
+_PARSED_SERVE = M.parse_measures(SERVE_MEASURES)
+
+
+def _slate_metrics(scores, rel):
+    """In-loop evaluation of a slate [B, D] against binary labels."""
+    batch = M.batch_from_dense(scores.astype(F32), rel.astype(F32))
+    per_q = M.compute_measures(batch, _PARSED_SERVE)
+    agg = M.aggregate(per_q, batch.query_mask)
+    return {k: agg[k] for k in ("ndcg_cut_10", "recip_rank", "success_10")}
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+
+def _lm_sharding(mesh, fsdp: bool,
+                 moe_fsdp_mode: str = "gather") -> Optional[LMSharding]:
+    if mesh is None:
+        return None
+    from repro.launch.mesh import data_axes_of
+
+    return LMSharding(data_axes=data_axes_of(mesh), fsdp_experts=fsdp,
+                      moe_fsdp_mode=moe_fsdp_mode)
+
+
+def _lm_opt_cfg():
+    return opt_lib.OptimizerConfig(lr=3e-4, warmup_steps=50,
+                                   decay_steps=20_000)
+
+
+def lm_step_bundle(cfg: tfm.TransformerConfig, shape: ShapeSpec, mesh,
+                   fsdp: bool = False,
+                   opt_memory_efficient: bool = False,
+                   opt_cfg: Optional[opt_lib.OptimizerConfig] = None
+                   ) -> StepBundle:
+    # decode gathers activations, not weight shards (§Perf iteration B)
+    shd = _lm_sharding(mesh, fsdp,
+                       "activation" if shape.kind == "decode" else "gather")
+    rng = jax.random.PRNGKey(0)
+    params_abs = _abstract(lambda: tfm.init_transformer(rng, cfg))
+    pspecs = (tfm.param_partition_specs(cfg, shd) if shd else
+              _replicated_specs(params_abs))
+    batch_axes = shd.batch if shd else None
+
+    if shape.kind == "train":
+        b, s = shape.get("global_batch"), shape.get("seq_len")
+        ocfg = opt_cfg or _lm_opt_cfg()
+        if opt_memory_efficient:
+            # §Perf iteration A: bf16 momentum + factored second moment
+            ocfg = opt_lib.OptimizerConfig(
+                lr=ocfg.lr, warmup_steps=ocfg.warmup_steps,
+                decay_steps=ocfg.decay_steps,
+                momentum_dtype="bfloat16", factored_v=True)
+        init_opt, update = opt_lib.adamw(ocfg)
+        opt_abs = _abstract(init_opt, params_abs)
+        ospecs = opt_lib.opt_state_partition_specs(pspecs, ocfg, params_abs)
+
+        def train_step(params, opt_state, tokens, labels):
+            def loss_fn(p):
+                logits = tfm.logits_train(p, tokens, cfg, mesh, shd)
+                loss = tfm.L.cross_entropy(logits, labels)
+                ranks = sorting.gold_rank(logits, labels)
+                return loss, ranks
+
+            (loss, ranks), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, info = update(grads, opt_state, params)
+            metrics = {"loss": loss, **info,
+                       **streaming.rank_metrics(ranks.reshape(-1))}
+            return params, opt_state, metrics
+
+        arg_specs = (params_abs, opt_abs,
+                     _sds((b, s), I32), _sds((b, s), I32))
+        in_sp = (pspecs, ospecs, P(batch_axes, None), P(batch_axes, None))
+        out_sp = (pspecs, ospecs, _replicated_specs(
+            _abstract_metrics(train_step, arg_specs)[2]))
+        return StepBundle(train_step, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp), donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        b, s = shape.get("global_batch"), shape.get("seq_len")
+
+        def prefill_step(params, tokens):
+            return tfm.prefill(params, tokens, cfg, mesh, shd)
+
+        arg_specs = (params_abs, _sds((b, s), I32))
+        cache_spec = (tfm.cache_partition_specs(cfg, shd) if shd
+                      else {"k": P(), "v": P()})
+        in_sp = (pspecs, P(batch_axes, None))
+        out_sp = (P(batch_axes, shd.model_axis) if shd else P(), cache_spec)
+        return StepBundle(prefill_step, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp))
+
+    if shape.kind == "decode":
+        b, s = shape.get("global_batch"), shape.get("seq_len")
+        cache_abs = _abstract(
+            lambda: tfm.init_cache(cfg, b, s, cfg.np_dtype))
+        cache_spec = (tfm.cache_partition_specs(cfg, shd) if shd
+                      else {"k": P(), "v": P()})
+
+        def decode(params, cache, token, pos, gold):
+            logits, cache = tfm.decode_step(params, cache, token, pos, cfg,
+                                            mesh, shd)
+            ranks = sorting.gold_rank(logits, gold)
+            metrics = streaming.rank_metrics(ranks)
+            return logits, cache, metrics
+
+        arg_specs = (params_abs, cache_abs, _sds((b,), I32), _sds((), I32),
+                     _sds((b,), I32))
+        in_sp = (pspecs, cache_spec, P(batch_axes), P(), P(batch_axes))
+        logits_sp = P(batch_axes, shd.model_axis) if shd else P()
+        out_sp = (logits_sp, cache_spec, _replicated_specs(
+            _abstract_metrics(decode, arg_specs)[2]))
+        return StepBundle(decode, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp), donate_argnums=(1,))
+
+    raise ValueError(f"unsupported LM shape kind {shape.kind}")
+
+
+def _abstract_metrics(fn, arg_specs):
+    return jax.eval_shape(fn, *arg_specs)
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+
+def _pad_to(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def gnn_step_bundle(cfg: gnn_lib.GatedGCNConfig, shape: ShapeSpec, mesh
+                    ) -> StepBundle:
+    from repro.launch.mesh import data_axes_of
+
+    shd = GNNSharding(data_axes=data_axes_of(mesh)) if mesh else None
+    n = shape.get("n_nodes")
+    e = shape.get("n_edges")
+    if mesh is not None:
+        # pad to mesh multiples (masks make padding semantically inert):
+        # nodes shard over the data axes, edges over the whole mesh.
+        import numpy as _np
+
+        n_data = int(_np.prod([mesh.shape[a] for a in data_axes_of(mesh)]))
+        n = _pad_to(n, n_data)
+        e = _pad_to(e, int(mesh.devices.size))
+    graph_task = shape.get("graph_task", False)
+    rng = jax.random.PRNGKey(0)
+    params_abs = _abstract(lambda: gnn_lib.init_gatedgcn(rng, cfg))
+    pspecs = _replicated_specs(params_abs)  # d_hidden=70: replicate weights
+    init_opt, update = opt_lib.adamw(opt_lib.OptimizerConfig(lr=1e-3))
+    opt_abs = _abstract(init_opt, params_abs)
+    ospecs = opt_lib.opt_state_partition_specs(pspecs)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits = gnn_lib.gatedgcn_forward(p, batch, cfg)
+            if graph_task:
+                # disjoint-union batch: mean-pool nodes per graph
+                n_graphs = shape.get("n_graphs")
+                pooled = jax.ops.segment_sum(
+                    logits * batch["node_mask"][:, None],
+                    batch["graph_ids"], num_segments=n_graphs)
+                cnt = jax.ops.segment_sum(
+                    batch["node_mask"].astype(F32), batch["graph_ids"],
+                    num_segments=n_graphs)
+                pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+                loss = tfm.L.cross_entropy(pooled, batch["graph_labels"])
+                ranks = sorting.gold_rank(pooled, batch["graph_labels"])
+                mask = jnp.ones_like(batch["graph_labels"], bool)
+            else:
+                mask = batch["node_mask"] & batch.get(
+                    "train_mask", batch["node_mask"])
+                loss = tfm.L.cross_entropy(logits, batch["labels"], mask)
+                ranks = sorting.gold_rank(logits, batch["labels"])
+            return loss, (ranks, mask)
+
+        (loss, (ranks, mask)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, info = update(grads, opt_state, params)
+        metrics = {"loss": loss, **info,
+                   **streaming.rank_metrics(ranks.reshape(-1),
+                                            mask.reshape(-1))}
+        return params, opt_state, metrics
+
+    batch_abs = {
+        "node_feat": _sds((n, cfg.d_in), F32),
+        "edge_feat": _sds((e, cfg.d_edge_in), F32),
+        "src": _sds((e,), I32),
+        "dst": _sds((e,), I32),
+        "labels": _sds((n,), I32),
+        "node_mask": _sds((n,), jnp.bool_),
+        "edge_mask": _sds((e,), jnp.bool_),
+    }
+    if graph_task:
+        ng = shape.get("n_graphs")
+        batch_abs["graph_ids"] = _sds((n,), I32)
+        batch_abs["graph_labels"] = _sds((ng,), I32)
+    if shd:
+        espec, nspec = shd.edges(), P(shd.batch)
+        bspecs = {
+            "node_feat": P(shd.batch, None), "edge_feat": P(espec[0], None),
+            "src": espec, "dst": espec, "labels": nspec,
+            "node_mask": nspec, "edge_mask": espec,
+        }
+        if graph_task:
+            bspecs["graph_ids"] = nspec
+            bspecs["graph_labels"] = P(shd.batch)
+    else:
+        bspecs = _replicated_specs(batch_abs)
+    arg_specs = (params_abs, opt_abs, batch_abs)
+    in_sp = (pspecs, ospecs, bspecs)
+    out_sp = (pspecs, ospecs,
+              _replicated_specs(_abstract_metrics(train_step, arg_specs)[2]))
+    return StepBundle(train_step, arg_specs, _named(mesh, in_sp),
+                      _named(mesh, out_sp), donate_argnums=(0, 1))
+
+
+# ===========================================================================
+# RecSys family
+# ===========================================================================
+
+
+def recsys_step_bundle(kind: str, cfg, shape: ShapeSpec, mesh) -> StepBundle:
+    from repro.launch.mesh import data_axes_of
+
+    shd = RecSysSharding(data_axes=data_axes_of(mesh)) if mesh else None
+    rng = jax.random.PRNGKey(0)
+    batch_axes = shd.batch if shd else None
+
+    if kind == "sasrec":
+        params_abs = _abstract(lambda: rec_lib.sasrec_init(rng, cfg))
+        pspecs = jax.tree.map(lambda _: P(), params_abs)
+        if shd:
+            pspecs["item_emb"] = shd.p_table()
+        seq = cfg.seq_len
+
+        def make_inputs(b):
+            return {
+                "items": _sds((b, seq), I32), "pos": _sds((b, seq), I32),
+                "neg": _sds((b, seq), I32), "mask": _sds((b, seq), jnp.bool_)}
+
+        def in_specs(b):
+            s = P(batch_axes, None)
+            return {"items": s, "pos": s, "neg": s, "mask": s}
+
+        loss_fn = lambda p, b: rec_lib.sasrec_loss(p, b, cfg)
+        score_slate = None
+        retrieval = lambda p, b: rec_lib.sasrec_retrieval_scores(p, b, cfg)
+    elif kind == "mind":
+        params_abs = _abstract(lambda: rec_lib.mind_init(rng, cfg))
+        pspecs = jax.tree.map(lambda _: P(), params_abs)
+        if shd:
+            pspecs["item_emb"] = shd.p_table()
+        hl = cfg.hist_len
+
+        def make_inputs(b):
+            return {"hist": _sds((b, hl), I32),
+                    "hist_mask": _sds((b, hl), jnp.bool_),
+                    "pos": _sds((b,), I32), "negs": _sds((b, 20), I32)}
+
+        def in_specs(b):
+            return {"hist": P(batch_axes, None),
+                    "hist_mask": P(batch_axes, None),
+                    "pos": P(batch_axes), "negs": P(batch_axes, None)}
+
+        loss_fn = lambda p, b: rec_lib.mind_loss(p, b, cfg)
+        retrieval = lambda p, b: rec_lib.mind_retrieval_scores(p, b, cfg)
+    else:  # CTR models: xdeepfm | autoint
+        score = (rec_lib.xdeepfm_score if kind == "xdeepfm"
+                 else rec_lib.autoint_score)
+        init = (rec_lib.xdeepfm_init if kind == "xdeepfm"
+                else rec_lib.autoint_init)
+        params_abs = _abstract(lambda: init(rng, cfg))
+        pspecs = jax.tree.map(lambda _: P(), params_abs)
+        if shd:
+            pspecs["table"] = shd.p_table()
+            if kind == "xdeepfm":
+                pspecs["linear"] = P(shd.model_axis)
+        nf = cfg.table.n_fields
+
+        def make_inputs(b):
+            out = {"ids": _sds((b, nf), I32), "labels": _sds((b,), I32)}
+            if cfg.n_multi_hot:
+                out["mh_ids"] = _sds((b, cfg.n_multi_hot, cfg.multi_hot_len),
+                                     I32)
+                out["mh_mask"] = _sds(
+                    (b, cfg.n_multi_hot, cfg.multi_hot_len), jnp.bool_)
+            return out
+
+        def in_specs(b):
+            out = {"ids": P(batch_axes, None), "labels": P(batch_axes)}
+            if cfg.n_multi_hot:
+                out["mh_ids"] = P(batch_axes, None, None)
+                out["mh_mask"] = P(batch_axes, None, None)
+            return out
+
+        loss_fn = lambda p, b: rec_lib.ctr_loss(score, p, b, cfg)[0]
+        retrieval = None
+
+    # ----- shapes ----------------------------------------------------------
+    if shape.kind == "train":
+        b = shape.get("batch")
+        init_opt, update = opt_lib.adamw(opt_lib.OptimizerConfig(lr=1e-3))
+        opt_abs = _abstract(init_opt, params_abs)
+        ospecs = opt_lib.opt_state_partition_specs(pspecs)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, info = update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, **info}
+
+        arg_specs = (params_abs, opt_abs, make_inputs(b))
+        in_sp = (pspecs, ospecs, in_specs(b))
+        out_sp = (pspecs, ospecs, _replicated_specs(
+            _abstract_metrics(train_step, arg_specs)[2]))
+        return StepBundle(train_step, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp), donate_argnums=(0, 1))
+
+    if shape.kind == "serve":
+        b = shape.get("batch")
+        slate = shape.get("slate", 0)
+        if kind in ("sasrec", "mind") and slate:
+            # online ranking: score a per-user candidate slate + in-loop eval
+            def serve(params, batch, cand, rel):
+                scores = _slate_scores(kind, cfg, params, batch, cand)
+                return scores, _slate_metrics(scores, rel)
+
+            arg_specs = (params_abs, make_inputs(b),
+                         _sds((b, slate), I32), _sds((b, slate), I32))
+            in_sp = (pspecs, in_specs(b), P(batch_axes, None),
+                     P(batch_axes, None))
+            out_sp = ((P(batch_axes, None), _replicated_specs(
+                _abstract_metrics(serve, arg_specs)[1])))
+            return StepBundle(serve, arg_specs, _named(mesh, in_sp),
+                              _named(mesh, out_sp))
+
+        def serve(params, batch):
+            if kind in ("sasrec",):
+                h = rec_lib.sasrec_encode(params, batch["items"], cfg)[:, -1]
+                cand = jnp.take(params["item_emb"], batch["pos"][:, -1], 0)
+                return jnp.sum(h * cand, -1)
+            if kind == "mind":
+                caps = rec_lib.mind_interests(params, batch, cfg)
+                cand = jnp.take(params["item_emb"], batch["pos"], 0)
+                return jnp.max(jnp.einsum("bkd,bd->bk", caps, cand), -1)
+            return (rec_lib.xdeepfm_score if kind == "xdeepfm"
+                    else rec_lib.autoint_score)(params, batch, cfg)
+
+        arg_specs = (params_abs, make_inputs(b))
+        in_sp = (pspecs, in_specs(b))
+        out_sp = P(batch_axes)
+        return StepBundle(serve, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp))
+
+    if shape.kind == "retrieval":
+        b = shape.get("batch")
+        nc = shape.get("n_candidates")
+        topk = shape.get("topk", 1000)
+        # batch=1 per spec: user-side inputs stay replicated; all parallelism
+        # lives on the candidate axis (sharded over `model`).
+        cand_axis = shd.model_axis if shd else None
+
+        if retrieval is not None:
+            def serve(params, batch, cand_ids, rel):
+                bb = dict(batch)
+                bb["candidates"] = cand_ids
+                scores = retrieval(params, bb)
+                v, i = jax.lax.top_k(scores, topk)
+                return v, i, _slate_metrics(scores, rel)
+
+            arg_specs = (params_abs, make_inputs(b), _sds((nc,), I32),
+                         _sds((b, nc), I32))
+            cand_spec = P(cand_axis) if shd else P()
+            in_sp = (pspecs, _replicated_specs(in_specs(b)), cand_spec,
+                     P(None, cand_axis))
+        else:
+            # CTR: broadcast user fields over the candidate set (field 0 is
+            # the item id field)
+            def serve(params, batch, cand_ids, rel):
+                nfields = cfg.table.n_fields
+                ids = jnp.broadcast_to(batch["ids"], (nc, nfields))
+                ids = ids.at[:, 0].set(cand_ids)
+                scores = (rec_lib.xdeepfm_score if kind == "xdeepfm" else
+                          rec_lib.autoint_score)(
+                    params, {"ids": ids}, cfg)[None, :]
+                v, i = jax.lax.top_k(scores, topk)
+                return v, i, _slate_metrics(scores, rel)
+
+            arg_specs = (params_abs,
+                         {"ids": _sds((1, cfg.table.n_fields), I32)},
+                         _sds((nc,), I32), _sds((1, nc), I32))
+            in_sp = (pspecs, {"ids": P()}, P(cand_axis), P(None, cand_axis))
+        out_abs = _abstract_metrics(serve, arg_specs)
+        out_sp = ((P(), P(), _replicated_specs(out_abs[2])))
+        return StepBundle(serve, arg_specs, _named(mesh, in_sp),
+                          _named(mesh, out_sp))
+
+    raise ValueError(f"unsupported recsys shape kind {shape.kind}")
+
+
+def _slate_scores(kind, cfg, params, batch, cand):
+    """Scores of per-user candidate slates [B, S_cand]."""
+    if kind == "sasrec":
+        h = rec_lib.sasrec_encode(params, batch["items"], cfg)[:, -1]
+        ce = jnp.take(params["item_emb"], cand, axis=0)  # [B, S, D]
+        return jnp.einsum("bd,bsd->bs", h, ce)
+    caps = rec_lib.mind_interests(params, batch, cfg)  # [B, K, D]
+    ce = jnp.take(params["item_emb"], cand, axis=0)
+    return jnp.max(jnp.einsum("bkd,bsd->bks", caps, ce), axis=1)

@@ -1,0 +1,6 @@
+"""Model zoo: the assigned architectures, as pure-function JAX models.
+
+Params are nested dicts of arrays; configs are frozen dataclasses (hashable,
+so step functions can close over them under jit).  Layer stacks are scanned
+(`lax.scan` over stacked params) to keep HLO size O(1) in depth.
+"""

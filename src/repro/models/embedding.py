@@ -1,0 +1,84 @@
+"""EmbeddingBag for JAX — the recsys hot path, built not stubbed.
+
+JAX has no native EmbeddingBag and no CSR sparse; the bag is constructed from
+``jnp.take`` + ``jax.ops.segment_sum`` (reference path) with an optional
+Pallas scalar-prefetch kernel path (``kernels.embedding_bag``) for the
+single-device hot loop.
+
+Tables for the CTR models are one concatenated [Σ vocab_f, dim] array,
+row-sharded over `model` on the production mesh (vocab-parallel); field
+offsets turn per-field ids into global rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    n_fields: int
+    vocab_per_field: int
+    dim: int
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+
+def init_table(rng, cfg: TableConfig, dtype=jnp.float32, scale=0.01):
+    return (jax.random.normal(rng, (cfg.total_rows, cfg.dim)) * scale).astype(
+        dtype)
+
+
+def field_lookup(table, ids, cfg: TableConfig):
+    """Single-hot lookup: ids [B, n_fields] per-field → [B, n_fields, dim].
+
+    Per-field ids are offset into the concatenated table.  On the mesh the
+    table is row-sharded over `model`; GSPMD lowers the gather to the
+    vocab-parallel pattern (local gather + masked psum).
+    """
+    offsets = (jnp.arange(cfg.n_fields, dtype=ids.dtype) * cfg.vocab_per_field)
+    rows = ids + offsets[None, :]
+    return jnp.take(table, rows, axis=0)
+
+
+def embedding_bag(table, indices, segment_ids, n_bags,
+                  weights: Optional[jax.Array] = None,
+                  combiner: str = "sum", use_kernel: bool = False):
+    """Bag-combine table rows: [L] indices into [B] bags → [B, dim].
+
+    ``use_kernel`` routes through the Pallas scalar-prefetch kernel (indices
+    must then be pre-sorted by segment id).
+    """
+    if use_kernel:
+        from repro.kernels import ops
+
+        out = ops.embedding_bag(table, indices, segment_ids, n_bags, weights)
+    else:
+        rows = jnp.take(table, indices, axis=0)
+        if weights is not None:
+            rows = rows * weights[:, None]
+        out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if combiner == "mean":
+        ones = jnp.ones_like(segment_ids, dtype=out.dtype)
+        if weights is not None:
+            ones = weights
+        counts = jax.ops.segment_sum(ones, segment_ids, num_segments=n_bags)
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out
+
+
+def multi_hot_lookup(table, ids, mask, cfg: TableConfig, field: int,
+                     combiner: str = "sum"):
+    """Multi-hot field: ids [B, M] (padded, mask [B, M]) → [B, dim]."""
+    b, m = ids.shape
+    rows = ids + field * cfg.vocab_per_field
+    segs = jnp.broadcast_to(jnp.arange(b)[:, None], (b, m)).reshape(-1)
+    w = mask.reshape(-1).astype(table.dtype)
+    return embedding_bag(table, rows.reshape(-1), segs, b, weights=w,
+                         combiner=combiner)

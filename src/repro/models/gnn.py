@@ -1,0 +1,117 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553) via segment ops.
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge-index list —
+JAX has no sparse SpMM beyond BCOO, so gather→compute→scatter IS the system
+(see kernel_taxonomy §GNN).  Layer update (residual, edge-featured):
+
+    e'_ij = E1·e_ij + E2·h_i + E3·h_j                     (edge gate logits)
+    η_ij  = σ(e'_ij) / (Σ_{j'∈N(i)} σ(e'_ij') + ε)        (normalized gates)
+    h'_i  = h_i + ReLU(LN(A·h_i + Σ_j η_ij ⊙ (B·h_j)))
+    e''_ij = e_ij + ReLU(LN(e'_ij))
+
+LayerNorm replaces the paper's BatchNorm (running stats don't compose with
+pjit across graph shards; noted in DESIGN.md).  Graphs are padded to static
+(n_nodes, n_edges) with masks; padded edges point at node 0 with zero gates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_edge_in: int
+    n_classes: int
+    dtype: str = "float32"
+    remat: bool = False
+    unroll_layers: bool = False  # cost-probe only
+
+    @property
+    def np_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_gatedgcn(rng, cfg: GatedGCNConfig):
+    d = cfg.d_hidden
+    keys = jax.random.split(rng, 4)
+
+    def stack(key, shape, fan_in):
+        ks = jax.random.split(key, cfg.n_layers)
+        return jax.vmap(
+            lambda k: jax.random.normal(k, shape) * (1.0 / fan_in) ** 0.5
+        )(ks).astype(cfg.np_dtype)
+
+    # A,B (node) + E1,E2,E3 (edge) packed: [L, D, 5D]
+    lp = {
+        "w_node": stack(keys[0], (d, 2 * d), d),
+        "w_edge": stack(keys[1], (d, 3 * d), d),
+    }
+    params = {
+        "proj_node": L.dense_init(jax.random.fold_in(rng, 1), cfg.d_in, d,
+                                  cfg.np_dtype),
+        "proj_edge": L.dense_init(jax.random.fold_in(rng, 2), cfg.d_edge_in, d,
+                                  cfg.np_dtype),
+        "layers": lp,
+        "head": L.dense_init(jax.random.fold_in(rng, 3), d, cfg.n_classes,
+                             cfg.np_dtype),
+    }
+    return params
+
+
+def _ln(x):
+    return L.nonparam_layernorm(x)
+
+
+def gatedgcn_forward(params, batch, cfg: GatedGCNConfig):
+    """batch: dict with
+      node_feat [N, d_in], edge_feat [E, d_edge_in],
+      src [E] i32, dst [E] i32, node_mask [N] bool, edge_mask [E] bool.
+    Returns per-node class logits [N, n_classes].
+    """
+    h = batch["node_feat"].astype(cfg.np_dtype) @ params["proj_node"]
+    e = batch["edge_feat"].astype(cfg.np_dtype) @ params["proj_edge"]
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"][:, None].astype(h.dtype)
+    n = h.shape[0]
+
+    def body(carry, lp):
+        h, e = carry
+        ah_bh = h @ lp["w_node"]  # [N, 2D]
+        a_h, b_h = jnp.split(ah_bh, 2, axis=-1)
+        # Edge gate logits: E1·e + E2·h_src + E3·h_dst (packed weights).
+        e1, e2, e3 = jnp.split(lp["w_edge"], 3, axis=-1)
+        eg = e @ e1 + jnp.take(h, src, axis=0) @ e2 + jnp.take(h, dst, axis=0) @ e3
+        sig = jax.nn.sigmoid(eg) * emask
+        denom = jax.ops.segment_sum(sig, dst, num_segments=n) + 1e-6
+        msg = sig * jnp.take(b_h, src, axis=0)
+        agg = jax.ops.segment_sum(msg, dst, num_segments=n) / denom
+        h_new = h + jax.nn.relu(_ln(a_h + agg))
+        e_new = e + jax.nn.relu(_ln(eg))
+        return (h_new, e_new), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.models.scan_utils import scan_layers
+    (h, e), _ = scan_layers(body, (h, e), params["layers"],
+                            cfg.unroll_layers)
+    return h @ params["head"]
+
+
+def gatedgcn_loss(params, batch, cfg: GatedGCNConfig):
+    """Node-classification CE + in-loop ranking metrics of the gold class."""
+    logits = gatedgcn_forward(params, batch, cfg)
+    labels = batch["labels"]
+    mask = batch["node_mask"] & batch.get("train_mask", batch["node_mask"])
+    loss = L.cross_entropy(logits, labels, mask)
+    return loss, logits

@@ -1,0 +1,76 @@
+"""Shared neural-net building blocks (pure functions, no framework)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layernorm(x, eps=1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(x, scale):
+    """Dispatch: scale is None → non-parametric LN, else RMSNorm."""
+    if scale is None:
+        return nonparam_layernorm(x)
+    return rmsnorm(x, scale)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary position embedding.  x: [..., S, n, head_dim], positions [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def squared_relu_ffn(x, w_up, w_down):
+    h = jnp.square(jax.nn.relu(x @ w_up))
+    return h @ w_down
+
+
+def gelu_ffn(x, w_up, w_down):
+    return jax.nn.gelu(x @ w_up) @ w_down
+
+
+def softmax_fp32(logits, axis=-1):
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=axis)
+
+
+def cross_entropy(logits, labels, label_mask=None):
+    """Mean CE over valid positions; logits [..., V] (softmax in fp32)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if label_mask is None:
+        return jnp.mean(nll)
+    m = label_mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

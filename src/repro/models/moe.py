@@ -1,0 +1,156 @@
+"""Mixture-of-Experts block: top-k routing, capacity dispatch, expert GEMMs.
+
+Design (TPU-native, see DESIGN.md §5):
+
+* Activations entering the block are **replicated over the `model` axis** and
+  sharded over the data axes; experts are sharded over `model` (EP).  Each
+  model shard therefore already holds every token it could need — dispatch is
+  a *local gather*, combine is a *local scatter-add* followed by one
+  ``psum`` over `model` (the same collective a Megatron row-parallel FFN
+  pays).  No all-to-all, no GShard one-hot dispatch einsum: compiled FLOPs
+  stay ≈ the true expert FLOPs.
+
+* Capacity: each local expert takes its top ``C = cf · T · k / E`` tokens by
+  router weight (drop-lowest-probability policy); dropped tokens pass through
+  the residual stream only.
+
+* Optional FSDP: expert weights additionally sharded over `data` on the FFN
+  dim and all-gathered just-in-time (ZeRO-3) — needed for the 235B/480B
+  configs to fit HBM.
+
+The same function also runs without a mesh (smoke tests): all experts local,
+no collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: parallel dense MLP branch
+    router_dtype: str = "float32"
+
+
+def init_moe(rng, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    s_in = (1.0 / d_model) ** 0.5
+    s_out = (1.0 / f) ** 0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d_model, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d_model)) * s_out).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(c, 1)
+
+
+def moe_apply_local(x2d, params, cfg: MoEConfig, *, model_axis: Optional[str],
+                    fsdp_axis: Optional[str] = None,
+                    fsdp_mode: str = "gather"):
+    """Apply MoE to flat tokens ``x2d [T, D]`` (local shard when mapped).
+
+    ``params['w_*']`` hold the *local* expert slices when running under
+    shard_map (leading dim E_local); the router is replicated.
+
+    FSDP modes when expert FFN dims are additionally sharded over `data`:
+
+    * ``gather`` — ZeRO-3: all-gather the weight shards just-in-time.
+      Right for training, where tokens/device ≫ weight bytes.
+    * ``activation`` — gather the *tokens* over `data` instead, compute
+      partial FFN contributions with the local F-shard (SwiGLU is
+      elementwise in F, so F-sharded partials are exact), and
+      reduce-scatter the outputs back.  Right for decode, where a few
+      tokens/device would otherwise pay a full weight gather per layer
+      (arctic decode: 1.6 GB/layer weights vs ~4 MB/layer activations —
+      see EXPERIMENTS.md §Perf iteration B).
+    """
+    t, d = x2d.shape
+    w_gate, w_up, w_down = params["w_gate"], params["w_up"], params["w_down"]
+    activation_mode = fsdp_axis is not None and fsdp_mode == "activation"
+    if fsdp_axis is not None and fsdp_mode == "gather":
+        # ZeRO-3: FFN dim sharded over data; materialize just-in-time.
+        w_gate = lax.all_gather(w_gate, fsdp_axis, axis=2, tiled=True)
+        w_up = lax.all_gather(w_up, fsdp_axis, axis=2, tiled=True)
+        w_down = lax.all_gather(w_down, fsdp_axis, axis=1, tiled=True)
+    if activation_mode:
+        t_local = t
+        x2d = lax.all_gather(x2d, fsdp_axis, axis=0, tiled=True)
+        t, _ = x2d.shape
+    e_loc = w_gate.shape[0]
+
+    logits = x2d.astype(jnp.float32) @ params["router"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = lax.top_k(probs, cfg.top_k)  # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    first = 0
+    if model_axis is not None:
+        first = lax.axis_index(model_axis) * e_loc
+    local_ids = first + jnp.arange(e_loc, dtype=top_ids.dtype)
+    # Router weight of each token for each *local* expert: [E_loc, T].
+    hit = (top_ids[:, None, :] == local_ids[None, :, None]).astype(jnp.float32)
+    w_local = jnp.sum(hit * top_p[:, None, :], axis=-1).T
+
+    c = capacity(t, cfg)
+    c = min(c, t)
+    gate_vals, tok_idx = lax.top_k(w_local, c)  # [E_loc, C]
+    xg = jnp.take(x2d, tok_idx.reshape(-1), axis=0).reshape(e_loc, c, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xg, w_up)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    y = y * gate_vals[..., None].astype(y.dtype)
+
+    out = jnp.zeros_like(x2d)
+    out = out.at[tok_idx.reshape(-1)].add(y.reshape(-1, d))
+    if activation_mode:
+        # partial over the F-shards: sum + re-shard tokens in one collective
+        out = lax.psum_scatter(out, fsdp_axis, scatter_dimension=0,
+                               tiled=True)
+    if model_axis is not None:
+        out = lax.psum(out, model_axis)
+    return out
+
+
+def moe_apply(x, params, cfg: MoEConfig, *, mesh=None,
+              data_axes=("data",), model_axis="model",
+              fsdp_axis: Optional[str] = None, fsdp_mode: str = "gather"):
+    """MoE over ``x [..., D]``; uses shard_map when a mesh is provided."""
+    from jax.sharding import PartitionSpec as P
+
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    if mesh is None:
+        out = moe_apply_local(x2d, params, cfg, model_axis=None)
+        return out.reshape(shape)
+
+    def fn(xl, router, w_gate, w_up, w_down):
+        p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+        return moe_apply_local(xl, p, cfg, model_axis=model_axis,
+                               fsdp_axis=fsdp_axis, fsdp_mode=fsdp_mode)
+
+    wspec_gate = P(model_axis, None, fsdp_axis)
+    wspec_down = P(model_axis, fsdp_axis, None)
+    out = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(data_axes, None), P(), wspec_gate, wspec_gate, wspec_down),
+        out_specs=P(data_axes, None),
+        check_vma=False,
+    )(x2d, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return out.reshape(shape)

@@ -1,0 +1,32 @@
+"""Layer-stack scan with an unrolled variant.
+
+Production always scans (HLO stays O(1) in depth).  ``unroll=True`` exists
+for the dry-run's cost probe: XLA's HloCostAnalysis counts a while-loop body
+ONCE regardless of trip count, so per-layer costs can only be measured from
+an unrolled module (compile L=1 and L=2 unrolled; the difference is one
+layer's true cost — see launch/dryrun.py::run_scan_probe).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def scan_layers(body, carry, xs, unroll: bool = False, length=None):
+    """lax.scan(body, carry, xs) with an optional Python-loop unroll."""
+    if not unroll:
+        return lax.scan(body, carry, xs)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

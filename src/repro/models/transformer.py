@@ -1,0 +1,395 @@
+"""Decoder-only transformer LM: dense and MoE variants, train + serve paths.
+
+Covers the five assigned LM architectures:
+
+* qwen3-moe-235b  — 94L GQA(64/4) MoE 128e top-8, SwiGLU experts, RMSNorm
+* arctic-480b     — 35L GQA(56/8) MoE 128e top-2 + parallel dense residual
+* olmo-1b         — 16L MHA(16/16) GELU? → spec: non-parametric LN, SwiGLU
+* nemotron-4-15b  — 32L GQA(48/8) squared-ReLU FFN
+* phi3-medium-14b — 40L GQA(40/10) RoPE SwiGLU
+
+Implementation notes:
+* layer stack is a `lax.scan` over stacked params (HLO is O(1) in depth);
+  each layer body is `jax.checkpoint`-ed (full remat) when cfg.remat;
+* GQA attention, RoPE, fp32 softmax;
+* MoE via `models.moe` (shard_map EP; see that module);
+* the serve path is prefill(tokens) → cache, then decode_step(cache, token);
+  KV cache layout [L, B, KV, S, hd] with the sequence axis sharded over
+  `model` for the 32k/500k decode shapes (flash-decoding style partials — the
+  partial-softmax collectives are inserted by GSPMD from the sharding
+  constraints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import LMSharding, constrain
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.scan_utils import scan_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    ffn: str = "swiglu"  # swiglu | sq_relu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | nonparam
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    moe: Optional[moe_lib.MoEConfig] = None
+    dtype: str = "float32"
+    remat: bool = True
+    unroll_layers: bool = False  # cost-probe only; see models/scan_utils.py
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def np_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.moe is not None:
+            fe = self.moe.d_ff_expert
+            ffn = self.moe.n_experts * 3 * d * fe + d * self.moe.n_experts
+            if self.moe.dense_residual:
+                ffn += (3 if self.ffn == "swiglu" else 2) * d * f
+        else:
+            ffn = (3 if self.ffn == "swiglu" else 2) * d * f
+        per_layer = attn + ffn
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        fe = self.moe.d_ff_expert
+        ffn = self.moe.top_k * 3 * d * fe + d * self.moe.n_experts
+        if self.moe.dense_residual:
+            ffn += (3 if self.ffn == "swiglu" else 2) * d * f
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_transformer(rng, cfg: TransformerConfig):
+    dt = cfg.np_dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    n_q, n_kv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    keys = jax.random.split(rng, 12)
+
+    def stack_init(key, shape, fan_in):
+        ks = jax.random.split(key, cfg.n_layers)
+        scale = (1.0 / fan_in) ** 0.5
+        return (
+            jax.vmap(lambda k: jax.random.normal(k, shape) * scale)(ks)
+        ).astype(dt)
+
+    lp = {
+        "wq": stack_init(keys[0], (d, n_q), d),
+        "wk": stack_init(keys[1], (d, n_kv), d),
+        "wv": stack_init(keys[2], (d, n_kv), d),
+        "wo": stack_init(keys[3], (n_q, d), n_q),
+    }
+    if cfg.norm == "rmsnorm":
+        lp["attn_norm"] = jnp.ones((cfg.n_layers, d), dt)
+        lp["ffn_norm"] = jnp.ones((cfg.n_layers, d), dt)
+    dense_ffn = cfg.moe is None or cfg.moe.dense_residual
+    if dense_ffn:
+        if cfg.ffn == "swiglu":
+            lp["w_gate"] = stack_init(keys[4], (d, cfg.d_ff), d)
+        lp["w_up"] = stack_init(keys[5], (d, cfg.d_ff), d)
+        lp["w_down"] = stack_init(keys[6], (cfg.d_ff, d), cfg.d_ff)
+    if cfg.moe is not None:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        lp["router"] = stack_init(keys[7], (d, e), d).astype(jnp.float32)
+        lp["moe_gate"] = stack_init(keys[8], (e, d, fe), d)
+        lp["moe_up"] = stack_init(keys[9], (e, d, fe), d)
+        lp["moe_down"] = stack_init(keys[10], (e, fe, d), fe)
+
+    params = {
+        "embed": (jax.random.normal(keys[11], (cfg.vocab_size, d)) * 0.02).astype(dt),
+        "layers": lp,
+    }
+    if cfg.norm == "rmsnorm":
+        params["final_norm"] = jnp.ones((d,), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(jax.random.fold_in(rng, 99), (d, cfg.vocab_size))
+            * (1.0 / d) ** 0.5
+        ).astype(dt)
+    return params
+
+
+def param_partition_specs(cfg: TransformerConfig, shd: LMSharding):
+    """PartitionSpec pytree matching init_transformer's structure."""
+    from jax.sharding import PartitionSpec as P
+
+    def batched(spec):  # layer-stacked params get a leading None axis
+        return P(None, *spec)
+
+    lp = {
+        "wq": batched(shd.p_attn_in()),
+        "wk": batched(shd.p_attn_in()),
+        "wv": batched(shd.p_attn_in()),
+        "wo": batched(shd.p_attn_out()),
+    }
+    if cfg.norm == "rmsnorm":
+        lp["attn_norm"] = P(None, None)
+        lp["ffn_norm"] = P(None, None)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        if cfg.ffn == "swiglu":
+            lp["w_gate"] = batched(shd.p_ffn_in())
+        lp["w_up"] = batched(shd.p_ffn_in())
+        lp["w_down"] = batched(shd.p_ffn_out())
+    if cfg.moe is not None:
+        lp["router"] = P(None, None, None)
+        lp["moe_gate"] = batched(shd.p_expert_in())
+        lp["moe_up"] = batched(shd.p_expert_in())
+        lp["moe_down"] = batched(shd.p_expert_out())
+    specs = {"embed": shd.p_embed(), "layers": lp}
+    if cfg.norm == "rmsnorm":
+        specs["final_norm"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, shd.model_axis)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _dense_ffn(x, lp, cfg):
+    if cfg.ffn == "swiglu":
+        return L.swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+    if cfg.ffn == "sq_relu":
+        return L.squared_relu_ffn(x, lp["w_up"], lp["w_down"])
+    return L.gelu_ffn(x, lp["w_up"], lp["w_down"])
+
+
+def _ffn_block(x, lp, cfg, mesh, shd):
+    """FFN or MoE (+ optional arctic dense residual branch)."""
+    if cfg.moe is None:
+        return _dense_ffn(x, lp, cfg)
+    moe_params = {
+        "router": lp["router"],
+        "w_gate": lp["moe_gate"],
+        "w_up": lp["moe_up"],
+        "w_down": lp["moe_down"],
+    }
+    if mesh is not None and shd is not None:
+        x = constrain(x, shd.act())
+        out = moe_lib.moe_apply(
+            x, moe_params, cfg.moe, mesh=mesh,
+            data_axes=shd.data_axes, model_axis=shd.model_axis,
+            fsdp_axis=shd.fsdp_axis(), fsdp_mode=shd.moe_fsdp_mode)
+    else:
+        out = moe_lib.moe_apply(x, moe_params, cfg.moe, mesh=None)
+    if cfg.moe.dense_residual:
+        out = out + _dense_ffn(x, lp, cfg)
+    return out
+
+
+def _norm(x, scale_or_none):
+    return L.norm(x, scale_or_none)
+
+
+def _attention_train(x, lp, cfg, positions, shd):
+    b, s, d = x.shape
+    hd, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ lp["wq"]).reshape(b, s, h, hd)
+    k = (x @ lp["wk"]).reshape(b, s, kv, hd)
+    v = (x @ lp["wv"]).reshape(b, s, kv, hd)
+    if shd is not None:
+        q = constrain(q, shd.act_heads())
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    rep = h // kv
+    # Group query heads by their KV head: [b, s, kv, rep, hd].
+    qg = q.reshape(b, s, kv, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores / (hd**0.5)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v).reshape(b, s, h * hd)
+    return out @ lp["wo"]
+
+
+def _layer_train(x, lp, cfg, mesh, positions, shd):
+    a_scale = lp.get("attn_norm")
+    f_scale = lp.get("ffn_norm")
+    h = _attention_train(_norm(x, a_scale), lp, cfg, positions, shd)
+    x = x + h
+    h = _ffn_block(_norm(x, f_scale), lp, cfg, mesh, shd)
+    return x + h
+
+
+def logits_train(params, tokens, cfg: TransformerConfig, mesh=None,
+                 shd: Optional[LMSharding] = None):
+    """Full forward for training: tokens [B, S] → logits [B, S, V]."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if shd is not None:
+        x = constrain(x, shd.act())
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        y = _layer_train(carry, lp, cfg, mesh, positions, shd)
+        if shd is not None:
+            y = constrain(y, shd.act())
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = scan_layers(body, x, params["layers"], cfg.unroll_layers)
+    x = _norm(x, params.get("final_norm"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if shd is not None:
+        logits = constrain(logits, shd.logits())
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None):
+    dt = dtype or cfg.np_dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_partition_specs(cfg: TransformerConfig, shd: LMSharding):
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(None, *shd.cache())
+    return {"k": spec, "v": spec}
+
+
+def _attention_decode(x, lp, cfg, k_cache, v_cache, pos, shd):
+    """x [B, D] one new token; cache [B, KV, S, hd]; pos scalar int."""
+    b, d = x.shape
+    hd, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = h // kv
+    q = (x @ lp["wq"]).reshape(b, kv, rep, hd)
+    k_new = (x @ lp["wk"]).reshape(b, kv, 1, hd)
+    v_new = (x @ lp["wv"]).reshape(b, kv, 1, hd)
+    posb = jnp.full((b, 1), pos)
+    q = L.rope(q.reshape(b, 1, kv * rep, hd), posb, cfg.rope_theta).reshape(
+        b, kv, rep, hd)
+    k_new = L.rope(k_new.transpose(0, 2, 1, 3), posb, cfg.rope_theta
+                   ).transpose(0, 2, 1, 3)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=2)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=2)
+    if shd is not None:
+        k_cache = constrain(k_cache, shd.cache())
+        v_cache = constrain(v_cache, shd.cache())
+    s = k_cache.shape[2]
+    scores = jnp.einsum("bkrh,bksh->bkrs", q, k_cache).astype(jnp.float32)
+    scores = scores / (hd**0.5)
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrs,bksh->bkrh", probs, v_cache).reshape(b, h * hd)
+    return out @ lp["wo"], k_cache, v_cache
+
+
+def decode_step(params, cache, token, pos, cfg: TransformerConfig, mesh=None,
+                shd: Optional[LMSharding] = None):
+    """One decode step: token [B] → (logits [B, V], updated cache)."""
+    x = jnp.take(params["embed"], token, axis=0)  # [B, D]
+
+    def body(carry, scanned):
+        xc = carry
+        lp, k_c, v_c = scanned
+        a_scale = lp.get("attn_norm")
+        f_scale = lp.get("ffn_norm")
+        h, k_c, v_c = _attention_decode(
+            _norm(xc, a_scale), lp, cfg, k_c, v_c, pos, shd)
+        xc = xc + h
+        h = _ffn_block(_norm(xc, f_scale)[:, None, :], lp, cfg, mesh, shd)
+        xc = xc + h[:, 0, :]
+        return xc, (k_c, v_c)
+
+    x, (k_new, v_new) = scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        cfg.unroll_layers)
+    x = _norm(x, params.get("final_norm"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if shd is not None:
+        logits = constrain(logits, jax.sharding.PartitionSpec(
+            shd.batch, shd.model_axis))
+    return logits, {"k": k_new, "v": v_new}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, mesh=None,
+            shd: Optional[LMSharding] = None, max_seq: Optional[int] = None):
+    """Prefill: tokens [B, S] → (last-position logits, KV cache)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if shd is not None:
+        x = constrain(x, shd.act())
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        xc = carry
+        a_scale = lp.get("attn_norm")
+        f_scale = lp.get("ffn_norm")
+        xn = _norm(xc, a_scale)
+        hd, h_, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        k = (xn @ lp["wk"]).reshape(b, s, kv, hd)
+        v = (xn @ lp["wv"]).reshape(b, s, kv, hd)
+        k = L.rope(k, positions, cfg.rope_theta)
+        h = _attention_train(xn, lp, cfg, positions, shd)
+        xc = xc + h
+        h = _ffn_block(_norm(xc, f_scale), lp, cfg, mesh, shd)
+        xc = xc + h
+        k = k.transpose(0, 2, 1, 3)  # [B, KV, S, hd]
+        v = v.transpose(0, 2, 1, 3)
+        if max_seq > s:
+            pad = ((0, 0), (0, 0), (0, max_seq - s), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        if shd is not None:
+            k = constrain(k, shd.cache())
+            v = constrain(v, shd.cache())
+        return xc, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (k_all, v_all) = scan_layers(body, x, params["layers"],
+                                    cfg.unroll_layers)
+    x = _norm(x[:, -1], params.get("final_norm"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, {"k": k_all, "v": v_all}

@@ -1,0 +1,6 @@
+"""Paper §4: query-expansion RL on a synthetic collection.
+
+Pyndri → ``data.synthetic_ir.ql_scores`` (Dirichlet QL ranking, in-process);
+pytrec_eval → ``core`` evaluation (device-resident); OpenAI Gym → a
+dependency-free environment with the same reset/step contract.
+"""

@@ -1,0 +1,80 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+Two schemes, both applied around an explicit ``psum`` in a shard_map'd
+data-parallel step (see ``distributed.collectives.compressed_psum``):
+
+* ``bf16``  — cast gradients to bfloat16 before the all-reduce (halves
+  collective bytes; the reduction itself still accumulates in fp32 on TPU).
+* ``int8``  — per-leaf symmetric int8 quantization with **error feedback**:
+  the quantization residual is carried to the next step, so the compressed
+  SGD direction is unbiased over time (Karimireddy et al., 2019).
+
+Both compose with the roofline's collective term: bf16 halves it, int8
+quarters it, at zero HLO-FLOP cost.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(g):
+    return jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+
+
+def decompress_bf16(g):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+
+def quantize_int8(x, error: Optional[jax.Array] = None,
+                  scale: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (+carried error) → (int8 values, fp scale, new error).
+
+    In a distributed all-reduce the ``scale`` must be agreed on *before*
+    quantizing (pmax of the local absmax) — quantizing with local scales and
+    dequantizing with a shared one is biased.  Pass the shared scale in.
+    """
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_error = xf - deq
+    return q, scale, new_error
+
+
+def local_absmax(x, error: Optional[jax.Array] = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    return jnp.max(jnp.abs(xf))
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_grads_int8(grads, error_state):
+    """Returns (quantized tree of (q, scale), new error state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = quantize_int8(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_grads_int8(qs, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, scales)

@@ -1,0 +1,163 @@
+"""AdamW + schedules from scratch (pytree-based, optax-style interface).
+
+Optimizer state is stored as flat leaf lists aligned with
+``jax.tree.leaves(params)`` so per-leaf state layouts can vary:
+
+* ``momentum_dtype`` — storage dtype of m (fp32 math, cast on store).
+  bf16 halves the largest optimizer buffer.
+* ``factored_v`` — Adafactor-style factored second moment for rank≥2
+  params: v ≈ (R ⊗ C) / mean(R) with R/C the row/col EMAs of g².  Cuts v
+  from O(params) to O(rows+cols) — the difference between fitting and not
+  fitting a 480B model's optimizer state in HBM (EXPERIMENTS.md §Perf A).
+
+Optimizer state shards exactly like its parameters (ZeRO): the partition
+specs of (m, v) mirror the param specs (factored leaves drop the trimmed
+axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    schedule: str = "cosine"  # cosine | linear | constant
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    momentum_dtype: str = "float32"  # float32 | bfloat16
+    factored_v: bool = False  # Adafactor-style factored second moment
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: list
+    v: list
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "linear":
+            decay = 1.0 - (1 - cfg.min_lr_ratio) * t
+        else:
+            decay = jnp.array(1.0)
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def _is_factored(p, cfg: OptimizerConfig) -> bool:
+    return cfg.factored_v and p.ndim >= 2
+
+
+def _init_v(p, cfg: OptimizerConfig):
+    if _is_factored(p, cfg):
+        return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _update_v(v, g2, cfg: OptimizerConfig):
+    """Returns (new_v_state, effective v̂ tensor for the update)."""
+    b2 = cfg.b2
+    if isinstance(v, dict):
+        r = b2 * v["r"] + (1 - b2) * jnp.mean(g2, axis=-1)
+        c = b2 * v["c"] + (1 - b2) * jnp.mean(g2, axis=-2)
+        denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), 1e-30)
+        vhat = (r / denom)[..., None] * c[..., None, :]
+        return {"r": r, "c": c}, vhat
+    v = b2 * v + (1 - b2) * g2
+    return v, v
+
+
+def adamw(cfg: OptimizerConfig):
+    sched = make_schedule(cfg)
+    m_dtype = jnp.dtype(cfg.momentum_dtype)
+
+    def init(params) -> OptState:
+        leaves = jax.tree.leaves(params)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=[jnp.zeros(p.shape, m_dtype) for p in leaves],
+            v=[_init_v(p, cfg) for p in leaves])
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        step = state.step + 1
+        lr = sched(step)
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(p_leaves, g_leaves, state.m, state.v):
+            mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            v_state, vhat = _update_v(v, jnp.square(g), cfg)
+            delta = (mf / b1c) / (jnp.sqrt(vhat / b2c) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            new_m.append(mf.astype(m_dtype))
+            new_v.append(v_state)
+        params_out = jax.tree.unflatten(treedef, new_p)
+        return params_out, OptState(step=step, m=new_m, v=new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+def opt_state_partition_specs(param_specs, cfg: OptimizerConfig | None = None,
+                              params_abs=None) -> OptState:
+    """Optimizer-state specs mirror the parameter specs (ZeRO sharding).
+
+    Factored-v leaves drop the trimmed axis from the spec; pass the abstract
+    params so leaf ranks are known.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    spec_leaves = jax.tree.leaves(
+        param_specs, is_leaf=lambda x: isinstance(x, P))
+    if cfg is None or not cfg.factored_v or params_abs is None:
+        v_specs = list(spec_leaves)
+    else:
+        v_specs = []
+        for p, s in zip(jax.tree.leaves(params_abs), spec_leaves):
+            if _is_factored(p, cfg):
+                # pad the (possibly shorter-than-rank) spec with None first
+                full = tuple(s) + (None,) * (p.ndim - len(tuple(s)))
+                v_specs.append({"r": P(*full[:-1]),
+                                "c": P(*(full[:-2] + (full[-1],)))})
+            else:
+                v_specs.append(s)
+    return OptState(step=P(), m=list(spec_leaves), v=v_specs)

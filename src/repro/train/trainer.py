@@ -1,0 +1,149 @@
+"""Training loop with fault tolerance: auto-resume, async checkpoints,
+preemption handling, straggler detection, in-loop device-resident eval.
+
+The loop is deliberately thin — all heavy lifting is inside the jitted
+``train_step`` — because the paper's lesson is precisely that the host-side
+Python should only *instruct*, never compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    # straggler detection: a step slower than `straggler_factor` × the rolling
+    # median is flagged (on a real pod this hooks per-host barrier timings).
+    straggler_window: int = 20
+    straggler_factor: float = 3.0
+
+
+class StragglerMonitor:
+    """Rolling-median step-time outlier detector.
+
+    At pod scale each host runs one of these on its local step times; flagged
+    hosts are candidates for replacement before they stall the collective.
+    """
+
+    def __init__(self, window: int, factor: float):
+        self.window = window
+        self.factor = factor
+        self.times: list = []
+        self.flags: int = 0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5:
+            med = float(np.median(self.times))
+            if dt > self.factor * med:
+                self.flags += 1
+                return True
+        return False
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainConfig,
+        train_step: Callable,  # (params, opt_state, batch) -> (p, o, metrics)
+        params,
+        opt_state,
+        data_iter: Iterator,
+        eval_fn: Optional[Callable] = None,  # (params) -> dict of scalars
+    ):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.data_iter = data_iter
+        self.eval_fn = eval_fn
+        self.step = 0
+        self.history: list = []
+        self.monitor = StragglerMonitor(cfg.straggler_window,
+                                        cfg.straggler_factor)
+        self._preempted = False
+        self.checkpointer = (
+            ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_ckpts)
+            if cfg.ckpt_dir else None)
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def install_preemption_handler(self) -> None:
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def maybe_resume(self) -> bool:
+        """Auto-resume from the latest committed checkpoint, if any."""
+        if not self.cfg.ckpt_dir:
+            return False
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        state = {"params": self.params, "opt_state": self.opt_state}
+        restored, extra = ckpt_lib.restore(self.cfg.ckpt_dir, latest, state)
+        self.params = restored["params"]
+        self.opt_state = restored["opt_state"]
+        self.step = latest
+        return True
+
+    def _checkpoint(self) -> None:
+        if self.checkpointer is None:
+            return
+        self.checkpointer.save(
+            self.step, {"params": self.params, "opt_state": self.opt_state})
+
+    # -- loop ----------------------------------------------------------------
+
+    def run(self, log_fn: Callable[[str], None] = print) -> Dict:
+        last_metrics: Dict = {}
+        while self.step < self.cfg.total_steps:
+            batch = next(self.data_iter)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            self.step += 1
+            if self.monitor.record(dt):
+                log_fn(f"[straggler] step {self.step} took {dt:.3f}s "
+                       f"(>{self.cfg.straggler_factor}x rolling median)")
+            if self.step % self.cfg.log_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": self.step, "time_s": dt,
+                                     **last_metrics})
+                msg = " ".join(f"{k}={v:.4f}" for k, v in last_metrics.items())
+                log_fn(f"step {self.step}: {msg} ({dt*1e3:.1f} ms)")
+            if self.cfg.ckpt_dir and self.step % self.cfg.ckpt_every == 0:
+                self._checkpoint()
+            if self._preempted:
+                log_fn(f"[preemption] SIGTERM at step {self.step}; "
+                       "checkpointing and exiting")
+                self._checkpoint()
+                break
+        if self.checkpointer is not None:
+            self._checkpoint()
+            self.checkpointer.wait()
+        if self.eval_fn is not None:
+            last_metrics["eval"] = {
+                k: float(v) for k, v in self.eval_fn(self.params).items()}
+        return last_metrics

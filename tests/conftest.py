@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flag in its
+# own process); make sure nothing leaks in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

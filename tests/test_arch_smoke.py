@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch runs one
+forward/train step on CPU with a reduced config — output shapes + no NaNs.
+
+The FULL configs are exercised only by the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.common import smoke_shape
+from repro.launch.api import get_arch, list_archs
+
+RNG = np.random.default_rng(0)
+
+
+def _tiny_shape(arch, spec):
+    o = {}
+    if arch.family == "lm":
+        o = {"seq_len": 16, "global_batch": 2}
+    elif arch.family == "gnn":
+        o = {"n_nodes": 64, "n_edges": 128, "d_feat": 8, "n_classes": 5}
+        if spec.get("graph_task"):
+            o["n_graphs"] = 4
+    elif arch.family == "recsys":
+        o = {"batch": 4}
+        if spec.kind == "retrieval":
+            o.update({"n_candidates": 64, "topk": 8})
+        if spec.get("slate"):
+            o["slate"] = 16
+    elif arch.family == "eval":
+        o = {"n_queries": 8, "n_docs": 32, "n_judged": 8}
+    return smoke_shape(spec, **o)
+
+
+def _concretize(tree):
+    def mk(x):
+        if x.dtype == jnp.int32:
+            return jnp.asarray(RNG.integers(0, 2, x.shape).astype(np.int32))
+        if x.dtype == jnp.bool_:
+            return jnp.ones(x.shape, bool)
+        # |N(0, .1)|: optimizer second moments must be non-negative
+        return jnp.abs(jnp.asarray(
+            RNG.standard_normal(x.shape).astype(np.float32) * 0.1))
+    return jax.tree.map(mk, tree)
+
+
+ALL_CELLS = []
+for _name in list_archs():
+    _arch = get_arch(_name)
+    for _sname, _spec in _arch.shapes.items():
+        ALL_CELLS.append((_name, _sname))
+
+
+@pytest.mark.parametrize("arch_name,shape_name", ALL_CELLS)
+def test_arch_shape_smoke(arch_name, shape_name):
+    arch = get_arch(arch_name)
+    spec = arch.shapes[shape_name]
+    if spec.skip_reason:
+        pytest.skip(spec.skip_reason)
+    cfg = arch.make_config(smoke=True)
+    bundle = arch.make_step(cfg, _tiny_shape(arch, spec), None)
+    args = _concretize(bundle.arg_specs)
+    out = jax.jit(bundle.step_fn)(*args)
+    # shapes match the abstract spec, floats are finite
+    out_abs = jax.eval_shape(bundle.step_fn, *bundle.arg_specs)
+    got_leaves = jax.tree.leaves(out)
+    want_leaves = jax.tree.leaves(out_abs)
+    assert len(got_leaves) == len(want_leaves)
+    for g, w in zip(got_leaves, want_leaves):
+        assert g.shape == w.shape
+        if jnp.issubdtype(g.dtype, jnp.floating):
+            assert bool(jnp.isfinite(g).all()), "non-finite output"
+
+
+def test_registry_has_all_assigned_archs():
+    expected = {
+        "qwen3-moe-235b-a22b", "arctic-480b", "olmo-1b", "nemotron-4-15b",
+        "phi3-medium-14b", "gatedgcn", "sasrec", "xdeepfm", "mind",
+        "autoint", "pytrec-eval",
+    }
+    assert expected <= set(list_archs())
+
+
+def test_full_configs_match_spec():
+    """Config constants pinned to the assignment table."""
+    qwen = get_arch("qwen3-moe-235b-a22b").make_config(False)
+    assert (qwen.n_layers, qwen.d_model, qwen.n_heads, qwen.n_kv_heads,
+            qwen.vocab_size) == (94, 4096, 64, 4, 151936)
+    assert (qwen.moe.n_experts, qwen.moe.top_k) == (128, 8)
+    # ~235B total / ~22B active
+    assert 180e9 < qwen.param_count() < 280e9
+    assert 10e9 < qwen.active_param_count() < 30e9
+
+    arctic = get_arch("arctic-480b").make_config(False)
+    assert (arctic.n_layers, arctic.d_model, arctic.n_heads,
+            arctic.n_kv_heads, arctic.d_ff) == (35, 7168, 56, 8, 4864)
+    assert arctic.moe.dense_residual and arctic.moe.top_k == 2
+    assert 400e9 < arctic.param_count() < 560e9
+
+    olmo = get_arch("olmo-1b").make_config(False)
+    assert olmo.norm == "nonparam" and olmo.tie_embeddings
+    assert 0.8e9 < olmo.param_count() < 1.6e9
+
+    nemo = get_arch("nemotron-4-15b").make_config(False)
+    assert nemo.ffn == "sq_relu" and nemo.vocab_size == 256_000
+    assert 10e9 < nemo.param_count() < 20e9
+
+    phi = get_arch("phi3-medium-14b").make_config(False)
+    assert (phi.n_layers, phi.n_kv_heads, phi.d_ff) == (40, 10, 17_920)
+    assert 10e9 < phi.param_count() < 18e9
+
+    gg = get_arch("gatedgcn").make_config(False)
+    assert (gg.n_layers, gg.d_hidden) == (16, 70)
+
+    xd = get_arch("xdeepfm").make_config(False)
+    assert xd.cin_layers == (200, 200, 200) and xd.table.n_fields == 39
+
+    sr = get_arch("sasrec").make_config(False)
+    assert (sr.embed_dim, sr.n_blocks, sr.n_heads, sr.seq_len) == (50, 2, 1,
+                                                                   50)
+    mi = get_arch("mind").make_config(False)
+    assert (mi.n_interests, mi.capsule_iters, mi.table.dim) == (4, 3, 64)
+
+    ai = get_arch("autoint").make_config(False)
+    assert (ai.n_attn_layers, ai.n_attn_heads, ai.d_attn,
+            ai.table.dim) == (3, 2, 32, 16)

@@ -1,0 +1,88 @@
+"""pytrec_eval API parity, TREC formats, CLI + serialize-invoke-parse."""
+
+import io
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from repro.baselines import workflow
+from repro.core import RelevanceEvaluator, measure_keys, trec
+
+
+def test_paper_code_snippet():
+    """The minimal example from the paper's Code snippet 1."""
+    qrel = {"q1": {"d1": 0, "d2": 1}, "q2": {"d1": 1}}
+    evaluator = RelevanceEvaluator(qrel, {"map", "ndcg"})
+    run = {"q1": {"d1": 1.0, "d2": 0.0}, "q2": {"d1": 1.5, "d2": 0.2}}
+    results = evaluator.evaluate(run)
+    assert set(results) == {"q1", "q2"}
+    for qid in results:
+        assert set(results[qid]) == {"map", "ndcg"}
+    # q2: d1 relevant ranked first (d2 unjudged → non-relevant)
+    assert results["q2"]["map"] == 1.0
+    # q1: the only relevant doc (d2) is ranked second
+    assert results["q1"]["map"] == pytest.approx(0.5)
+
+
+def test_measure_keys_cutoff_families():
+    keys = measure_keys(("ndcg_cut", "P.5,10", "map"))
+    assert "ndcg_cut_5" in keys and "ndcg_cut_1000" in keys
+    assert "P_5" in keys and "P_10" in keys and "P_15" not in keys
+    assert "map" in keys
+
+
+def test_unsupported_measure_raises():
+    with pytest.raises(ValueError):
+        RelevanceEvaluator({"q": {"d": 1}}, {"not_a_measure"})
+
+
+def test_trec_roundtrip():
+    run = {"q1": {"d1": 1.5, "d2": -0.25}, "q2": {"d9": 3.0}}
+    qrel = {"q1": {"d1": 2, "d2": 0}, "q2": {"d9": 1}}
+    buf = io.StringIO()
+    trec.write_run(buf, run)
+    assert trec.parse_run(io.StringIO(buf.getvalue())) == run
+    buf = io.StringIO()
+    trec.write_qrel(buf, qrel)
+    assert trec.parse_qrel(io.StringIO(buf.getvalue())) == qrel
+
+
+def test_malformed_lines_raise():
+    with pytest.raises(ValueError):
+        trec.parse_run(io.StringIO("q1 Q0 d1 0 1.0\n"))  # 5 fields
+    with pytest.raises(ValueError):
+        trec.parse_qrel(io.StringIO("q1 0 d1\n"))
+
+
+def test_cli_output_format(tmp_path):
+    run = {"q1": {"d1": 2.0, "d2": 1.0}}
+    qrel = {"q1": {"d1": 1, "d2": 0}}
+    trec.save_run(str(tmp_path / "r.run"), run)
+    trec.save_qrel(str(tmp_path / "r.qrel"), qrel)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.baselines.trec_eval_cli", "-q",
+         "-m", "map", str(tmp_path / "r.qrel"), str(tmp_path / "r.run")],
+        capture_output=True, text=True, check=True,
+        env={**os.environ, "PYTHONPATH": src})
+    lines = out.stdout.strip().splitlines()
+    assert lines[0].split("\t") == ["map", "q1", "1.0000"]
+    assert lines[-1].split("\t") == ["map", "all", "1.0000"]
+
+
+def test_serialize_invoke_parse_matches_in_process(tmp_path):
+    """RQ1's two workflows must agree on the measure values."""
+    run = {"q1": {"d1": 0.3, "d2": 0.9, "d3": 0.1}}
+    qrel = {"q1": {"d1": 1, "d3": 2}}
+    stdout = workflow.serialize_invoke_parse(run, qrel, str(tmp_path),
+                                             measures=("map", "ndcg"))
+    parsed = {}
+    for line in stdout.splitlines():
+        meas, qid, val = line.split("\t")
+        parsed[(meas, qid)] = float(val)
+    res = RelevanceEvaluator(qrel, ("map", "ndcg")).evaluate(run)["q1"]
+    assert parsed[("map", "q1")] == pytest.approx(res["map"], abs=1e-4)
+    assert parsed[("ndcg", "q1")] == pytest.approx(res["ndcg"], abs=1e-4)

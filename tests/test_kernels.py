@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import measures as M
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("q,d,k", [
+    (1, 257, 10), (3, 1000, 100), (2, 4096, 1000), (5, 64, 64), (1, 10000, 13),
+])
+def test_topk_matches_lax(q, d, k):
+    scores = jnp.asarray(RNG.standard_normal((q, d)).astype(np.float32))
+    v, i = ops.topk(scores, k)
+    rv, ri = ref.topk_ref(scores, k)
+    kk = min(k, d)
+    np.testing.assert_allclose(np.asarray(v)[:, :kk], np.asarray(rv)[:, :kk])
+    np.testing.assert_array_equal(np.asarray(i)[:, :kk],
+                                  np.asarray(ri)[:, :kk])
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_topk_ties_break_by_index(dtype):
+    # heavy ties: the kernel must match lax.top_k's lower-index-first rule
+    scores = jnp.asarray(
+        RNG.choice(np.array([0.0, 1.0, 2.0], np.float32), size=(4, 2000)))
+    v, i = ops.topk(scores, 50)
+    rv, ri = jax.lax.top_k(scores, 50)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_topk_handles_short_rows():
+    scores = jnp.asarray(RNG.standard_normal((2, 5)).astype(np.float32))
+    v, i = ops.topk(scores, 8)
+    rv, ri = ref.topk_ref(scores, 8)
+    np.testing.assert_allclose(np.asarray(v)[:, :5], np.asarray(rv)[:, :5])
+
+
+@pytest.mark.parametrize("q,d", [(3, 64), (8, 200), (13, 1024), (1, 4096)])
+def test_fused_measures_matches_ref(q, d):
+    scores = jnp.asarray(RNG.standard_normal((q, d)).astype(np.float32))
+    rel = jnp.asarray(RNG.integers(0, 4, (q, d)).astype(np.float32))
+    judged = jnp.asarray(RNG.random((q, d)) < 0.6)
+    batch = M.batch_from_dense(scores, rel, judged=judged)
+    s = M.sort_batch(batch)
+    scal = ops.make_scalars(batch.n_rel, batch.n_judged_nonrel,
+                            batch.ideal_rel)
+    got = ops.fused_measures_cols(s.rel, s.judged, scal)
+    want = ref.fused_measures_ref(s.rel, s.judged, scal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_fused_evaluate_matches_measure_core():
+    q, d = 9, 300
+    scores = jnp.asarray(RNG.standard_normal((q, d)).astype(np.float32))
+    rel = jnp.asarray(RNG.integers(0, 3, (q, d)).astype(np.float32))
+    batch = M.batch_from_dense(scores, rel)
+    fused = ops.evaluate_fused(batch)
+    parsed = M.parse_measures(("map", "ndcg", "ndcg_cut", "P", "recall",
+                               "recip_rank", "Rprec", "bpref", "success"))
+    want = M.compute_measures(batch, parsed)
+    for k, v in want.items():
+        np.testing.assert_allclose(np.asarray(fused[k]), np.asarray(v),
+                                   atol=2e-4, rtol=2e-4, err_msg=k)
+
+
+@pytest.mark.parametrize("v,e,b,l", [(30, 8, 4, 20), (100, 32, 10, 64),
+                                     (11, 16, 3, 7)])
+def test_embedding_bag_matches_ref(v, e, b, l):
+    table = jnp.asarray(RNG.standard_normal((v, e)).astype(np.float32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, b, l)).astype(np.int32))
+    idx = jnp.asarray(RNG.integers(0, v, l).astype(np.int32))
+    w = jnp.asarray(RNG.random(l).astype(np.float32))
+    got = ops.embedding_bag(table, idx, seg, b, w)
+    want = ref.embedding_bag_ref(table, idx, seg, b, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_embedding_bag_empty_bags_zero():
+    table = jnp.ones((5, 4), jnp.float32)
+    idx = jnp.asarray([1, 2], jnp.int32)
+    seg = jnp.asarray([2, 2], jnp.int32)
+    out = ops.embedding_bag(table, idx, seg, 4)
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[2]), 2.0)
+    np.testing.assert_allclose(np.asarray(out[3]), 0.0)
+
+
+def test_embedding_module_kernel_path_matches_reference_path():
+    from repro.models import embedding as E
+
+    table = jnp.asarray(RNG.standard_normal((50, 8)).astype(np.float32))
+    idx = jnp.asarray(np.sort(RNG.integers(0, 50, 30)).astype(np.int32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, 6, 30)).astype(np.int32))
+    a = E.embedding_bag(table, idx, seg, 6, use_kernel=False)
+    b = E.embedding_bag(table, idx, seg, 6, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) of the measure core's invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import pure_eval
+from repro.core import RelevanceEvaluator
+
+MEASURES = ("map", "ndcg", "P", "recall", "recip_rank", "Rprec", "bpref",
+            "success", "ndcg_cut", "map_cut")
+BOUNDED = [m for m in
+           ("map", "ndcg", "P_5", "recall_10", "recip_rank", "Rprec",
+            "bpref", "success_1", "ndcg_cut_10", "map_cut_10")]
+
+
+@st.composite
+def run_and_qrel(draw, max_docs=40):
+    n_docs = draw(st.integers(1, max_docs))
+    docs = [f"d{i}" for i in range(n_docs)]
+    scores = draw(st.lists(
+        # subnormals excluded: XLA flushes them to zero (score ties would
+        # then resolve differently than in pure Python — float32 semantics
+        # boundary, documented in DESIGN.md)
+        st.floats(-100, 100, allow_nan=False, allow_subnormal=False,
+                  width=32),
+        min_size=n_docs, max_size=n_docs))
+    rels = draw(st.lists(st.integers(-1, 3) | st.none(),
+                         min_size=n_docs, max_size=n_docs))
+    qrel = {d: r for d, r in zip(docs, rels) if r is not None}
+    if not any(r is not None and r > 0 for r in rels):
+        qrel["d_unret"] = 1  # ensure R>0 (trec_eval skips R=0 queries)
+    return {"q": dict(zip(docs, scores))}, {"q": qrel}
+
+
+@given(run_and_qrel())
+@settings(max_examples=60, deadline=None)
+def test_measures_bounded_01(data):
+    run, qrel = data
+    res = RelevanceEvaluator(qrel, MEASURES).evaluate(run)["q"]
+    for key in BOUNDED:
+        assert -1e-6 <= res[key] <= 1 + 1e-6, (key, res[key])
+
+
+@given(run_and_qrel(), st.randoms())
+@settings(max_examples=40, deadline=None)
+def test_insertion_order_invariance(data, rnd):
+    """trec_eval ignores the order documents appear in the run."""
+    run, qrel = data
+    docs = list(run["q"].items())
+    rnd.shuffle(docs)
+    shuffled = {"q": dict(docs)}
+    ev = RelevanceEvaluator(qrel, MEASURES)
+    a = ev.evaluate(run)["q"]
+    b = ev.evaluate(shuffled)["q"]
+    for k in a:
+        assert a[k] == b[k], k
+
+
+@given(run_and_qrel())
+@settings(max_examples=40, deadline=None)
+def test_jax_core_equals_pure_python(data):
+    run, qrel = data
+    ours = RelevanceEvaluator(qrel, MEASURES).evaluate(run)["q"]
+    ref = pure_eval.evaluate(run, qrel, MEASURES)["q"]
+    for k, v in ref.items():
+        assert math.isclose(ours[k], v, rel_tol=1e-4, abs_tol=2e-4), \
+            (k, ours[k], v)
+
+
+@given(st.integers(1, 30), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_ideal_ranking_is_perfect(n_docs, extra_levels):
+    """Scoring documents by their own relevance yields NDCG=1, AP=1 (when
+    every relevant doc is retrieved)."""
+    qrel = {"q": {f"d{i}": (i % (extra_levels + 2)) for i in range(n_docs)}}
+    if not any(v > 0 for v in qrel["q"].values()):
+        qrel["q"]["d0"] = 1
+    run = {"q": {d: float(r) for d, r in qrel["q"].items()}}
+    res = RelevanceEvaluator(qrel, ("ndcg", "map")).evaluate(run)["q"]
+    # fusion may change the dcg/idcg reduction-tree order → last-ulp drift
+    assert abs(res["ndcg"] - 1.0) < 1e-6
+    assert abs(res["map"] - 1.0) < 1e-6
+
+
+@given(run_and_qrel())
+@settings(max_examples=30, deadline=None)
+def test_promoting_relevant_doc_never_hurts_ap(data):
+    """Moving a relevant doc to the top of the ranking cannot decrease AP."""
+    run, qrel = data
+    rel_docs = [d for d, r in qrel["q"].items() if r >= 1 and d in run["q"]]
+    if not rel_docs:
+        return
+    ev = RelevanceEvaluator(qrel, ("map",))
+    before = ev.evaluate(run)["q"]["map"]
+    boosted = dict(run["q"])
+    boosted[rel_docs[0]] = max(boosted.values()) + 1.0
+    after = ev.evaluate({"q": boosted})["q"]["map"]
+    assert after >= before - 1e-6
+
+
+@given(st.lists(st.floats(0, 1, allow_nan=False, width=32), min_size=2,
+                max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_precision_recall_consistency(scores):
+    """recall_k * R == P_k * k == #relevant in top k (counting identity)."""
+    docs = {f"d{i}": float(s) for i, s in enumerate(scores)}
+    qrel = {"q": {f"d{i}": int(i % 2 == 0) for i in range(len(scores))}}
+    if not any(qrel["q"].values()):
+        qrel["q"]["d0"] = 1
+    r = sum(qrel["q"].values())
+    res = RelevanceEvaluator(qrel, ("P", "recall")).evaluate({"q": docs})["q"]
+    for k in (5, 10, 100):
+        assert res[f"recall_{k}"] * r == pytest.approx(res[f"P_{k}"] * k,
+                                                       abs=1e-4)
+
+
+import pytest  # noqa: E402  (used in the last property)

@@ -1,0 +1,77 @@
+"""Streaming (in-loop) evaluator vs one-shot batch evaluation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batch_from_dense, compute_measures, parse_measures
+from repro.core import streaming
+
+RNG = np.random.default_rng(3)
+NAMES = ("ndcg", "recip_rank", "P")
+
+
+def _rand_batch(q, d):
+    scores = jnp.asarray(RNG.standard_normal((q, d)).astype(np.float32))
+    rel = jnp.asarray(RNG.integers(0, 2, (q, d)).astype(np.float32))
+    return batch_from_dense(scores, rel)
+
+
+def test_streaming_equals_batch():
+    batches = [_rand_batch(4, 50) for _ in range(3)]
+    state = streaming.metric_init(NAMES)
+    for b in batches:
+        state = streaming.metric_update(state, b, NAMES)
+    stream = streaming.metric_finalize(state)
+
+    parsed = parse_measures(NAMES)
+    sums = {k: 0.0 for k in stream}
+    n = 0
+    for b in batches:
+        per_q = compute_measures(b, parsed)
+        for k in sums:
+            sums[k] += float(jnp.sum(per_q[k]))
+        n += b.scores.shape[0]
+    for k in sums:
+        assert float(stream[k]) == pytest.approx(sums[k] / n, abs=1e-5), k
+
+
+def test_streaming_respects_query_mask():
+    b = _rand_batch(4, 20)
+    masked = b._replace(query_mask=jnp.asarray([True, True, False, False]))
+    state = streaming.metric_update(streaming.metric_init(NAMES), masked,
+                                    NAMES)
+    assert float(state["__count"]) == 2.0
+
+
+def test_rank_metrics_single_relevant_equivalence():
+    """rank_metrics == full measures when exactly one doc is relevant."""
+    q, d = 6, 40
+    scores = jnp.asarray(RNG.standard_normal((q, d)).astype(np.float32))
+    gold = jnp.asarray(RNG.integers(0, d, (q,)).astype(np.int32))
+    rel = jnp.zeros((q, d)).at[jnp.arange(q), gold].set(1.0)
+    batch = batch_from_dense(scores, rel)
+    parsed = parse_measures(("ndcg", "recip_rank", "success"))
+    full = compute_measures(batch, parsed)
+
+    from repro.core.sorting import gold_rank
+
+    ranks = gold_rank(scores, gold)
+    quick = streaming.rank_metrics(ranks, ks=(1, 5, 10))
+    assert float(quick["recip_rank"]) == pytest.approx(
+        float(jnp.mean(full["recip_rank"])), abs=1e-5)
+    assert float(quick["ndcg"]) == pytest.approx(
+        float(jnp.mean(full["ndcg"])), abs=1e-5)
+    assert float(quick["success_10"]) == pytest.approx(
+        float(jnp.mean(full["success_10"])), abs=1e-5)
+
+
+def test_gold_rank_tie_semantics():
+    from repro.core.sorting import gold_rank
+
+    scores = jnp.asarray([[1.0, 2.0, 2.0, 0.5]])
+    # ranking: idx1 (2.0, wins tie by lower index), idx2 (2.0), idx0, idx3
+    assert int(gold_rank(scores, jnp.asarray([1]))[0]) == 1
+    assert int(gold_rank(scores, jnp.asarray([2]))[0]) == 2
+    assert int(gold_rank(scores, jnp.asarray([0]))[0]) == 3
+    assert int(gold_rank(scores, jnp.asarray([3]))[0]) == 4

@@ -1,0 +1,161 @@
+"""Training substrate: optimizer, checkpoint/restart, fault tolerance,
+gradient compression."""
+
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as C
+from repro.train import compression as Z
+from repro.train import optimizer as O
+from repro.train.trainer import StragglerMonitor, TrainConfig, Trainer
+
+
+def test_adamw_converges_on_quadratic():
+    init, update = O.adamw(O.OptimizerConfig(
+        lr=0.1, warmup_steps=0, decay_steps=1000, weight_decay=0.0,
+        schedule="constant"))
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = init(params)
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(params)
+        params, state, _ = update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clipping_and_schedule():
+    cfg = O.OptimizerConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                            clip_norm=1.0)
+    sched = O.make_schedule(cfg)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(cfg.min_lr_ratio)
+    clipped, norm = O.clip_by_global_norm({"g": jnp.full((4,), 100.0)}, 1.0)
+    assert float(O.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+    C.save(d, 3, tree, extra={"note": "x"})
+    assert C.latest_step(d) == 3
+    restored, extra = C.restore(d, 3, jax.eval_shape(lambda: tree))
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert extra == {"note": "x"}
+    # a checkpoint without .COMMIT is invisible (atomicity)
+    os.remove(os.path.join(d, "step_00000003", ".COMMIT"))
+    assert C.latest_step(d) is None
+
+
+def test_checkpoint_shape_validation(tmp_path):
+    d = str(tmp_path)
+    C.save(d, 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        C.restore(d, 1, {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+def test_checkpoint_gc(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        C.save(d, s, {"a": jnp.zeros(1)})
+    C.garbage_collect(d, keep=2)
+    assert C.latest_step(d) == 4
+    assert not os.path.exists(os.path.join(d, "step_00000001"))
+
+
+def _make_trainer(tmp_path, steps=12):
+    init, update = O.adamw(O.OptimizerConfig(lr=0.05, warmup_steps=0,
+                                             schedule="constant"))
+    params = {"x": jnp.zeros(2)}
+    opt = init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.sum((p["x"] - batch) ** 2))(params)
+        params, opt_state, info = update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    def data():
+        while True:
+            yield jnp.asarray([1.0, -1.0])
+
+    cfg = TrainConfig(total_steps=steps, log_every=50, ckpt_every=5,
+                      ckpt_dir=str(tmp_path / "ckpt"))
+    return Trainer(cfg, step, params, opt, data())
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    t = _make_trainer(tmp_path)
+    t.run(log_fn=lambda *_: None)
+    t.checkpointer.wait()
+    assert C.latest_step(str(tmp_path / "ckpt")) == 12
+
+
+def test_trainer_auto_resume(tmp_path):
+    t = _make_trainer(tmp_path)
+    t.run(log_fn=lambda *_: None)
+    t.checkpointer.wait()
+    # a "restarted job": fresh trainer, same ckpt dir → resumes at step 12
+    t2 = _make_trainer(tmp_path, steps=15)
+    assert t2.maybe_resume()
+    assert t2.step == 12
+    t2.run(log_fn=lambda *_: None)
+    t2.checkpointer.wait()
+    assert C.latest_step(str(tmp_path / "ckpt")) == 15
+
+
+def test_trainer_preemption(tmp_path):
+    t = _make_trainer(tmp_path, steps=10_000)
+    msgs = []
+    orig_record = t.monitor.record
+
+    def record_and_preempt(dt):
+        if t.step == 7:
+            t._preempted = True  # simulate SIGTERM mid-run
+        return orig_record(dt)
+
+    t.monitor.record = record_and_preempt
+    t.run(log_fn=msgs.append)
+    t.checkpointer.wait()
+    assert t.step == 7
+    assert C.latest_step(str(tmp_path / "ckpt")) == 7
+    assert any("preemption" in m for m in msgs)
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(window=10, factor=3.0)
+    flagged = [m.record(0.1) for _ in range(8)]
+    assert not any(flagged)
+    assert m.record(1.0) is True
+    assert m.flags == 1
+
+
+def test_int8_error_feedback_is_unbiased_over_time():
+    """With error feedback, the accumulated quantized sum tracks the true
+    gradient sum (residuals are carried, not dropped)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256).astype(np.float32) * 1e-3)
+    err = jnp.zeros(256)
+    acc = jnp.zeros(256)
+    for _ in range(50):
+        q, scale, err = Z.quantize_int8(g_true, err)
+        acc = acc + q.astype(jnp.float32) * scale
+    rel = float(jnp.linalg.norm(acc / 50 - g_true) / jnp.linalg.norm(g_true))
+    assert rel < 0.02
+    # without error feedback the same signal can vanish entirely
+    q0, s0, _ = Z.quantize_int8(g_true * 1e-6)
+    assert float(jnp.abs(q0).max()) <= 127
+
+
+def test_bf16_compression_roundtrip():
+    g = {"w": jnp.asarray([1.0, 2.0, 3.0])}
+    out = Z.decompress_bf16(Z.compress_bf16(g))
+    np.testing.assert_allclose(np.asarray(out["w"]), [1, 2, 3], rtol=1e-2)
