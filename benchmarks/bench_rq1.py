@@ -31,7 +31,7 @@ def run(full: bool = False) -> List[Dict]:
 
             def in_process():
                 ev = RelevanceEvaluator(qrel, MEASURES)
-                ev.evaluate(run_dict)
+                ev.evaluate(run_dict)  # vectorized densify path (default)
 
             t_in = time_call(in_process, reps=reps)
             row = {"n_queries": nq, "n_docs": nd,
@@ -46,4 +46,50 @@ def run(full: bool = False) -> List[Dict]:
             rows.append(row)
             print(f"rq1 q={nq} d={nd}: " + " ".join(
                 f"{k}={row[k]:.1f}" for k in row if k.startswith("speedup")))
+    return rows
+
+
+def densify(full: bool = False) -> List[Dict]:
+    """Densify segment: run→``EvalBatch`` conversion cost in isolation.
+
+    Three timings per grid point, all producing bit-identical batches
+    (proved by ``tests/test_densify.py``):
+
+    * ``reference`` — the seed per-query-loop densifier
+      (``RelevanceEvaluator(..., densify="reference")``);
+    * ``vectorized`` — the flat pipeline on dict-of-dicts input (cold: pays
+      the Python→numpy docno/score extraction every call);
+    * ``session`` — ``batch_from_buffer`` on a pre-tokenized ``RunBuffer``,
+      the steady-state cost when the same collection is evaluated repeatedly
+      (the paper's "conversion happens once" pitch; this is what
+      ``evaluate_many`` / ``core.streaming`` pay per step after the first).
+
+    ``speedup_densify`` (reference/session) is the headline; ``speedup_cold``
+    (reference/vectorized) isolates the one-shot dict-ingest win.
+    """
+    reps = 20 if full else 5
+    grid = ((100, 100), (100, 1000), (1000, 100), (1000, 1000))
+    rows = []
+    for nq, nd in grid:
+        run_dict, qrel = synthesize_run(nq, nd)
+        qids = list(run_dict)
+        ev_vec = RelevanceEvaluator(qrel, MEASURES)
+        ev_ref = RelevanceEvaluator(qrel, MEASURES, densify="reference")
+        t_ref = time_call(lambda: ev_ref._densify(run_dict, qids), reps=reps)
+        t_cold = time_call(lambda: ev_vec._densify(run_dict, qids), reps=reps)
+        buf = ev_vec.tokenize_run(run_dict)
+        t_sess = time_call(lambda: ev_vec.batch_from_buffer(buf), reps=reps)
+        row = {
+            "n_queries": nq, "n_docs": nd,
+            "reference_us": t_ref * 1e6,
+            "vectorized_us": t_cold * 1e6,
+            "session_us": t_sess * 1e6,
+            "speedup_cold": t_ref / t_cold,
+            "speedup_densify": t_ref / t_sess,
+        }
+        rows.append(row)
+        print(f"densify q={nq} d={nd}: ref={t_ref*1e6:.0f}us "
+              f"cold={t_cold*1e6:.0f}us ({row['speedup_cold']:.2f}x) "
+              f"session={t_sess*1e6:.0f}us "
+              f"({row['speedup_densify']:.2f}x)")
     return rows

@@ -25,11 +25,20 @@ def run(full: bool = False) -> List[Dict]:
         # evaluator construction (the one-time qrel parse) is outside the
         # timed region, matching the paper's per-evaluation comparison
         ev = RelevanceEvaluator(qrel, ("ndcg",))
+        ev_ref = RelevanceEvaluator(qrel, ("ndcg",), densify="reference")
         t_ours = time_call(lambda: ev.evaluate(run_dict), reps=reps)
         t_native = time_call(lambda: native_ndcg.ndcg(docs, rels), reps=reps)
+        # densify segment: the conversion share of the RQ2 crossover —
+        # vectorized vs the seed per-query loop, at a single tiny query
+        t_dens = time_call(lambda: ev._densify(run_dict, ["q0"]), reps=reps)
+        t_dens_ref = time_call(lambda: ev_ref._densify(run_dict, ["q0"]),
+                               reps=reps)
         rows.append({"n_docs": nd, "ours_us": t_ours * 1e6,
                      "native_us": t_native * 1e6,
+                     "densify_us": t_dens * 1e6,
+                     "densify_ref_us": t_dens_ref * 1e6,
                      "speedup": t_native / t_ours})
         print(f"rq2 d={nd}: ours={t_ours*1e6:.0f}us native="
-              f"{t_native*1e6:.0f}us speedup={t_native/t_ours:.2f}")
+              f"{t_native*1e6:.0f}us speedup={t_native/t_ours:.2f} "
+              f"densify={t_dens*1e6:.0f}us (ref {t_dens_ref*1e6:.0f}us)")
     return rows

@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (20 reps, 10k queries)")
     ap.add_argument("--only", action="append", default=None,
-                    choices=("rq1", "rq2", "qlearning", "batched"))
+                    choices=("rq1", "rq2", "densify", "qlearning", "batched"))
     args = ap.parse_args(argv)
 
     from benchmarks import bench_batched, bench_qlearning, bench_rq1, \
@@ -27,6 +27,7 @@ def main(argv=None) -> None:
     suites = {
         "rq1": bench_rq1.run,
         "rq2": bench_rq2.run,
+        "densify": bench_rq1.densify,
         "qlearning": bench_qlearning.run,
         "batched": bench_batched.run,
     }
@@ -49,6 +50,10 @@ def main(argv=None) -> None:
     for row in results.get("rq2", []):
         print(f"rq2_d{row['n_docs']},{row['ours_us']:.1f},"
               f"speedup={row['speedup']:.2f}")
+    for row in results.get("densify", []):
+        print(f"densify_q{row['n_queries']}_d{row['n_docs']},"
+              f"{row['session_us']:.1f},"
+              f"speedup={row['speedup_densify']:.2f}")
     for row in results.get("qlearning", []):
         print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
               f"tail_reward={row['tail_avg_reward']:+.4f}")

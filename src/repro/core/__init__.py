@@ -7,12 +7,13 @@ Public API mirrors pytrec_eval:
 * ``measures`` / ``streaming`` — batched + in-loop device entry points.
 """
 
-from repro.core.evaluator import RelevanceEvaluator, aggregate_results
+from repro.core.evaluator import RelevanceEvaluator, RunBuffer, aggregate_results
 from repro.core.measures import (
     DEFAULT_CUTOFFS,
     SUPPORTED_MEASURES as supported_measures,
     EvalBatch,
     batch_from_dense,
+    batch_from_flat,
     compute_measures,
     compute_measures_jit,
     measure_keys,
@@ -22,7 +23,9 @@ from repro.core import streaming, trec, sorting
 
 __all__ = [
     "RelevanceEvaluator",
+    "RunBuffer",
     "aggregate_results",
+    "batch_from_flat",
     "supported_measures",
     "DEFAULT_CUTOFFS",
     "EvalBatch",

@@ -1,4 +1,4 @@
-"""pytrec_eval-compatible evaluator front-end.
+"""pytrec_eval-compatible evaluator front-end with a vectorized fast path.
 
 :class:`RelevanceEvaluator` reproduces the pytrec_eval API:
 
@@ -12,21 +12,50 @@
 Internally the dict-of-dicts run is densified into a padded ``EvalBatch`` and
 dispatched to the jitted batched measure core (``core.measures``).  Padding is
 bucketed to powers of two so repeated calls with similar shapes reuse the same
-compiled executable — the analogue of pytrec_eval's "conversion to trec_eval's
-internal format", and like the paper's, it is the dominant cost for tiny
-rankings (RQ2 crossover).
+compiled executable.
 
-The qrel-side statistics (R, judged-non-relevant count, ideal gain vector) are
-precomputed once at construction, mirroring pytrec_eval's one-time qrel parse.
+Densification is the analogue of pytrec_eval's "conversion to trec_eval's
+internal format", and — like the paper's — it dominates for tiny rankings
+(RQ2 crossover).  It is therefore built as a *flat* pipeline with all string
+work hoisted to construction time:
+
+* at construction, every qrel docno is interned into one sorted global
+  vocabulary (``np.unique``), and the qrel side is laid out as contiguous
+  slabs: a sorted ``(query, token)`` key array with judgment values for the
+  run→qrel join, per-query ideal-gain rows, and R / judged-non-relevant
+  count vectors;
+* at ``evaluate`` time the whole run chunk is flattened into single
+  ``(qid_idx, docno, score)`` arrays; ONE lexicographic argsort produces the
+  trec_eval tie-break ranks, ONE ``searchsorted`` against the interned
+  vocabulary plus ONE ``searchsorted`` against the key slab performs the
+  run→qrel join, and the results are scattered into the padded ``[Q, D]``
+  tensors with fancy indexing.  No Python loop touches individual documents;
+  per-query work is limited to O(Q) dict lookups on the mapping input.
+
+The seed per-query densifier is retained verbatim as the ``reference``
+path (``RelevanceEvaluator(..., densify="reference")``) for benchmarking and
+for bit-identity tests (``tests/test_densify.py``).
+
+Session API (persistent, string-free re-evaluation):
+
+* :meth:`RelevanceEvaluator.evaluate_many` evaluates a sequence (or mapping)
+  of runs against the cached qrel state;
+* :meth:`RelevanceEvaluator.tokenize_run` /
+  :meth:`RelevanceEvaluator.buffer_from_arrays` /
+  :meth:`RelevanceEvaluator.buffer_from_tokens` build a :class:`RunBuffer` —
+  a pre-tokenized run whose docnos have been resolved against the interned
+  vocabulary once.  :meth:`RelevanceEvaluator.evaluate_buffer` (optionally
+  with fresh scores) then skips all string work, and
+  :meth:`RelevanceEvaluator.batch_from_buffer` yields an ``EvalBatch`` for
+  ``core.streaming``'s in-training-loop accumulators.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping, Sequence
+from itertools import chain, repeat
+from typing import Dict, Iterable, List, Mapping, Sequence, Union
 
 import numpy as np
-
-import jax.numpy as jnp
 
 from repro.core import measures as M
 
@@ -41,6 +70,51 @@ def _bucket(n: int, minimum: int = 8) -> int:
     return b
 
 
+class RunBuffer:
+    """A run pre-tokenized against an evaluator's interned docno vocabulary.
+
+    Holds the flat, string-free representation of one run chunk: query
+    indices, padded-column positions, qrel join results (judgment values and
+    judged flags), trec_eval tie-break ranks, and (optionally) scores.  The
+    expensive docno work — string materialization, the lexicographic
+    tie-break sort, and the vocabulary join — happened exactly once at
+    construction; re-evaluating the same collection with new scores is pure
+    numeric scatter + the jitted measure core.
+
+    Construct via :meth:`RelevanceEvaluator.tokenize_run`,
+    :meth:`RelevanceEvaluator.buffer_from_arrays`, or
+    :meth:`RelevanceEvaluator.buffer_from_tokens`.
+    """
+
+    __slots__ = ("qids", "gidx", "qidx", "col", "counts", "rel", "judged",
+                 "tiebreak", "scores")
+
+    def __init__(self, qids, gidx, qidx, col, counts, rel, judged, tiebreak,
+                 scores):
+        self.qids: List[str] = qids  # chunk qids, evaluation order
+        self.gidx = gidx  # [nq] i64 — evaluator-global query indices
+        self.qidx = qidx  # [n] i64 — flat doc → chunk-local query index
+        self.col = col  # [n] i64 — flat doc → column in the padded tensor
+        self.counts = counts  # [nq] i64 — retrieved docs per query
+        self.rel = rel  # [n] f32 — joined judgment (0 for unjudged)
+        self.judged = judged  # [n] bool — doc appears in the qrels
+        self.tiebreak = tiebreak  # [n] i32 — docno desc-lex rank in query
+        self.scores = scores  # [n] f32 or None — default scores
+
+    def __len__(self) -> int:
+        return len(self.qids)
+
+    def with_scores(self, scores) -> "RunBuffer":
+        """Same collection, new flat scores (concatenated in query order)."""
+        scores = np.ascontiguousarray(scores, dtype=np.float32).reshape(-1)
+        if scores.shape[0] != self.qidx.shape[0]:
+            raise ValueError(
+                f"expected {self.qidx.shape[0]} scores, got {scores.shape[0]}")
+        return RunBuffer(self.qids, self.gidx, self.qidx, self.col,
+                         self.counts, self.rel, self.judged, self.tiebreak,
+                         scores)
+
+
 class RelevanceEvaluator:
     """Evaluate rankings against relevance judgments, trec_eval semantics."""
 
@@ -49,9 +123,13 @@ class RelevanceEvaluator:
         query_relevance: QrelType,
         measures: Iterable[str],
         relevance_level: int = 1,
+        densify: str = "vectorized",
     ):
         if not isinstance(query_relevance, Mapping):
             raise TypeError("query_relevance must be a mapping qid -> {doc: rel}")
+        if densify not in ("vectorized", "reference"):
+            raise ValueError(f"unknown densify path {densify!r}")
+        self.densify_path = densify
         self.relevance_level = float(relevance_level)
         self.measures = M.parse_measures(tuple(measures))
         self.measure_keys = M.measure_keys(tuple(measures))
@@ -68,25 +146,99 @@ class RelevanceEvaluator:
             }
         else:
             self._qrel = dict(query_relevance)
-        # Per-query qrel statistics (computed once; pytrec_eval's qrel parse).
-        # Docnos are kept as a *sorted numpy string array* so the run→rel join
-        # in _densify is a vectorized searchsorted, not a Python dict loop.
-        self._qstats = {}
-        self._qrel_sorted = {}
-        for qid, docs in self._qrel.items():
-            rels = np.array(sorted(docs.values(), reverse=True), dtype=np.float32)
-            n_rel = float((rels >= self.relevance_level).sum())
-            n_nonrel = float(len(rels)) - n_rel
-            self._qstats[qid] = (rels, n_rel, n_nonrel)
-            docnos = np.array(list(docs.keys()))
-            vals = np.fromiter(docs.values(), dtype=np.float32,
-                               count=len(docs))
-            order = np.argsort(docnos)
-            self._qrel_sorted[qid] = (docnos[order], vals[order])
+        self._build_interned()
+        self._reference_state_built = False
 
     #: queries per device batch: bounds padding waste and lets consecutive
     #: chunks reuse one compiled executable (pytrec_eval's C loop analogue)
     chunk_queries: int = 2048
+
+    #: max entries for the dense (query, token) join tables (f32 + bool)
+    _DENSE_JOIN_CAP: int = 1 << 24
+
+    #: max bincount size for the counting-sort tie-break rank
+    _COUNTING_RANK_CAP: int = 1 << 24
+
+    # -- construction-time qrel interning ------------------------------------
+
+    def _build_interned(self) -> None:
+        """One-time qrel parse into flat slabs (pytrec_eval's C conversion).
+
+        Builds: the sorted docno vocabulary; a sorted ``(query, token)`` key
+        array + value array for the vectorized run→qrel join; per-query
+        ideal-gain rows ``[Q, Jmax]``; and the R / judged-non-relevant
+        vectors.  Everything downstream indexes these slabs with fancy
+        indexing — no per-query recomputation at evaluate time.
+        """
+        self._qids: List[str] = list(self._qrel)
+        self._qid_index: Dict[str, int] = {
+            q: i for i, q in enumerate(self._qids)}
+        nq = len(self._qids)
+        counts = np.fromiter((len(self._qrel[q]) for q in self._qids),
+                             dtype=np.int64, count=nq)
+        total = int(counts.sum())
+        self._judged_counts = counts
+        if total == 0:
+            self._vocab = np.empty(0, dtype="U1")
+            self._tok = {}
+            self._qrel_key = np.empty(0, dtype=np.int64)
+            self._qrel_val = np.empty(0, dtype=np.float32)
+            self._rel_table = None
+            self._judged_table = None
+            self._ideal = np.zeros((nq, 0), dtype=np.float32)
+            self._n_rel = np.zeros(nq, dtype=np.float32)
+            self._n_nonrel = np.zeros(nq, dtype=np.float32)
+            return
+        docnos = np.array(list(chain.from_iterable(
+            self._qrel[q] for q in self._qids)))
+        vals = np.fromiter(
+            chain.from_iterable(self._qrel[q].values() for q in self._qids),
+            dtype=np.float32, count=total)
+        qidx = np.repeat(np.arange(nq, dtype=np.int64), counts)
+        qptr = np.zeros(nq + 1, dtype=np.int64)
+        np.cumsum(counts, out=qptr[1:])
+
+        # Interned vocabulary: one sorted array of all distinct qrel docnos,
+        # plus the docno→token hash map for O(1) per-doc interning of runs.
+        self._vocab = np.unique(docnos)
+        self._tok: Dict[str, int] = {
+            d: i for i, d in enumerate(self._vocab.tolist())}
+        tok = np.searchsorted(self._vocab, docnos)  # exact by construction
+        key = qidx * np.int64(len(self._vocab)) + tok
+        order = np.argsort(key)  # (query, token) keys are unique
+        self._qrel_key = key[order]
+        self._qrel_val = vals[order]
+        # Dense join tables (rel value + judged flag indexed by the same
+        # (query, token) key) when the qrel is small enough; searchsorted
+        # over the sorted key slab otherwise.
+        if nq * len(self._vocab) <= self._DENSE_JOIN_CAP:
+            self._rel_table = np.zeros(nq * len(self._vocab), dtype=np.float32)
+            self._judged_table = np.zeros(nq * len(self._vocab), dtype=bool)
+            self._rel_table[self._qrel_key] = self._qrel_val
+            self._judged_table[self._qrel_key] = True
+        else:
+            self._rel_table = None
+            self._judged_table = None
+
+        # Per-query statistics, vectorized over the whole qrel at once.
+        binrel = (vals >= self.relevance_level).astype(np.float64)
+        n_rel = np.bincount(qidx, weights=binrel, minlength=nq)
+        self._n_rel = n_rel.astype(np.float32)
+        self._n_nonrel = (counts - n_rel).astype(np.float32)
+
+        # Ideal-gain rows: judgments sorted descending per query, scattered
+        # into one contiguous [Q, Jmax] slab.
+        jmax = int(counts.max())
+        ideal = np.zeros((nq, jmax), dtype=np.float32)
+        iorder = np.lexsort((-vals, qidx))
+        icol = np.arange(total, dtype=np.int64) - qptr[qidx]
+        ideal[qidx[iorder], icol] = vals[iorder]
+        self._ideal = ideal
+
+    @property
+    def vocab(self) -> np.ndarray:
+        """The interned docno vocabulary (sorted; token id = position)."""
+        return self._vocab
 
     # -- pytrec_eval API -----------------------------------------------------
 
@@ -99,17 +251,297 @@ class RelevanceEvaluator:
         for lo in range(0, len(qids), self.chunk_queries):
             chunk = qids[lo:lo + self.chunk_queries]
             batch, _ = self._densify(run, chunk)
-            per_query = M.compute_measures_jit(batch, self.measures,
-                                               self.relevance_level)
-            per_query = {k: np.asarray(v) for k, v in per_query.items()}
-            for i, qid in enumerate(chunk):
-                out[qid] = {k: float(per_query[k][i])
-                            for k in self.measure_keys}
+            self._emit(out, chunk, batch)
+        return out
+
+    def evaluate_many(
+        self,
+        runs: Union[Mapping[str, RunType], Sequence[RunType]],
+    ) -> Union[Dict[str, Dict], List[Dict]]:
+        """Evaluate several runs against the same cached qrel state.
+
+        The persistent-session entry point: qrel interning, measure parsing,
+        and the jit cache are shared across all runs.  Accepts either a
+        mapping ``{run_name: run}`` (returns a mapping of results) or a
+        sequence of runs (returns a list of results).
+        """
+        if isinstance(runs, Mapping):
+            return {name: self.evaluate(r) for name, r in runs.items()}
+        return [self.evaluate(r) for r in runs]
+
+    # -- session API: pre-tokenized runs -------------------------------------
+
+    def tokenize_run(self, run: RunType) -> RunBuffer:
+        """Do the string work for a run once, yielding a reusable buffer."""
+        return self._tokenize_chunk(run, [q for q in run if q in self._qrel])
+
+    def buffer_from_arrays(self, qids, docnos, scores) -> RunBuffer:
+        """Tokenize a flat ``(qid, docno, score)`` triple-array run.
+
+        The array analogue of :meth:`tokenize_run` — pairs with
+        ``core.trec.parse_run_arrays`` so a TREC run file goes straight into
+        the tokenized form without ever building a dict-of-dicts.  Rows may
+        arrive in any order; queries are grouped with a stable sort, and rows
+        for queries absent from the qrels are dropped (pytrec_eval
+        intersection semantics).
+        """
+        qids = np.asarray(qids)
+        docnos = np.asarray(docnos)
+        scores = np.asarray(scores, dtype=np.float32)
+        uniq, inv = np.unique(qids, return_inverse=True)
+        known = np.fromiter((q in self._qid_index for q in uniq.tolist()),
+                            dtype=bool, count=len(uniq))
+        keep = known[inv]
+        inv = inv[keep]
+        order = np.argsort(inv, kind="stable")
+        grouped_counts = np.bincount(inv, minlength=len(uniq))
+        kept_uniq = [q for q, k in zip(uniq.tolist(), known.tolist()) if k]
+        counts = grouped_counts[known].astype(np.int64)
+        return self._make_buffer(kept_uniq, counts, docnos[keep][order],
+                                 scores[keep][order])
+
+    def buffer_from_tokens(self, qids: Sequence[str], counts, tokens,
+                           scores=None) -> RunBuffer:
+        """Build a buffer from *pre-tokenized* integer docnos — no strings.
+
+        ``tokens`` is the flat concatenation (query order given by ``qids`` /
+        ``counts``) of indices into :attr:`vocab`; out-of-vocabulary documents
+        are ``-1``.  Tokens must be unique within a query.  Tie-break ranks
+        are derived from token order — exact for in-vocabulary docnos (the
+        vocabulary is lex-sorted), while OOV documents rank after all
+        in-vocabulary docs at equal score.  OOV docs are unjudged, so this
+        only reorders unjudged-vs-unjudged pairs relative to trec_eval, which
+        no measure observes; score ties between an OOV and a judged doc are
+        the one divergence, documented here.
+        """
+        qids = [str(q) for q in qids]
+        missing = [q for q in qids if q not in self._qid_index]
+        if missing:
+            raise KeyError(f"qids not in qrels: {missing[:3]}")
+        counts = np.asarray(counts, dtype=np.int64)
+        tokens = np.asarray(tokens, dtype=np.int64)
+        total = int(counts.sum())
+        if tokens.shape[0] != total:
+            raise ValueError(
+                f"token count {tokens.shape[0]} != sum(counts) {total}")
+        nq = len(qids)
+        gidx = np.fromiter((self._qid_index[q] for q in qids),
+                           dtype=np.int64, count=nq)
+        qidx = np.repeat(np.arange(nq, dtype=np.int64), counts)
+        qptr = np.zeros(nq + 1, dtype=np.int64)
+        np.cumsum(counts, out=qptr[1:])
+        col = np.arange(total, dtype=np.int64) - qptr[qidx]
+        in_vocab = tokens >= 0
+        rel, judged = self._join_tokens(gidx, qidx,
+                                        np.maximum(tokens, 0), in_vocab)
+        # Desc-token rank == desc-lex rank for in-vocab docs; OOV (-1) sorts
+        # first ascending → last descending.
+        tiebreak = self._desc_ranks(np.lexsort((tokens, qidx)), qidx, qptr,
+                                    counts)
+        if scores is not None:
+            scores = np.ascontiguousarray(scores,
+                                          dtype=np.float32).reshape(-1)
+            if scores.shape[0] != total:
+                raise ValueError(
+                    f"score count {scores.shape[0]} != sum(counts) {total}")
+        return RunBuffer(qids, gidx, qidx, col, counts, rel, judged, tiebreak,
+                         scores)
+
+    def batch_from_buffer(self, buf: RunBuffer,
+                          scores=None) -> M.EvalBatch:
+        """Padded ``EvalBatch`` from a buffer (numeric work only).
+
+        Feed the result to ``core.measures.compute_measures_jit`` or to
+        ``core.streaming.metric_update`` inside a training loop.
+        """
+        if scores is not None:
+            buf = buf.with_scores(scores)
+        if buf.scores is None:
+            raise ValueError("buffer has no scores; pass scores=")
+        nq = len(buf.qids)
+        max_d = int(buf.counts.max()) if nq else 0
+        jcounts = self._judged_counts[buf.gidx]
+        max_j = int(jcounts.max()) if nq else 0
+        return M.batch_from_flat(
+            qidx=buf.qidx, col=buf.col, scores=buf.scores,
+            tiebreak=buf.tiebreak, rel=buf.rel, judged=buf.judged,
+            ideal_rows=self._ideal[buf.gidx],
+            n_rel=self._n_rel[buf.gidx],
+            n_judged_nonrel=self._n_nonrel[buf.gidx],
+            n_queries=nq, q_pad=_bucket(nq, 1), d_pad=_bucket(max_d),
+            j_pad=_bucket(max(max_j, 1)), counts=buf.counts)
+
+    def evaluate_buffer(self, buf: RunBuffer,
+                        scores=None) -> Dict[str, Dict[str, float]]:
+        """Evaluate a pre-tokenized buffer; optional fresh flat scores."""
+        if not len(buf):
+            return {}
+        batch = self.batch_from_buffer(buf, scores)
+        out: Dict[str, Dict[str, float]] = {}
+        self._emit(out, buf.qids, batch)
         return out
 
     # -- densification --------------------------------------------------------
 
     def _densify(self, run: RunType, qids: Sequence[str]):
+        if self.densify_path == "reference":
+            return self._densify_reference(run, qids)
+        return self._densify_vectorized(run, qids)
+
+    def _densify_vectorized(self, run: RunType, qids: Sequence[str]):
+        """Flat pipeline: one tie-break lexsort, one vocab join, one scatter."""
+        batch = self.batch_from_buffer(self._tokenize_chunk(run, qids))
+        return batch, np.asarray(batch.query_mask)
+
+    def _tokenize_chunk(self, run: RunType, qids: Sequence[str]) -> RunBuffer:
+        """Dict-of-dicts chunk → RunBuffer via the interned token map.
+
+        The hot path does NOT materialize a docno string array: every docno
+        is interned through the construction-time hash map in one C-level
+        ``map`` pass, after which tie-break ranks and the qrel join are pure
+        integer work.  Only runs containing out-of-vocabulary docnos (absent
+        from the qrels) fall back to the exact string pipeline, because OOV
+        tie-breaks need real lexicographic comparisons.
+        """
+        doc_maps = [run[q] for q in qids]
+        nq = len(qids)
+        counts = np.fromiter(map(len, doc_maps), dtype=np.int64, count=nq)
+        total = int(counts.sum())
+        if not total:
+            return self._make_buffer(list(qids), counts,
+                                     np.empty(0, dtype="U1"),
+                                     np.empty(0, dtype=np.float32))
+        tokens = np.fromiter(
+            map(self._tok.get, chain.from_iterable(doc_maps), repeat(-1)),
+            dtype=np.int64, count=total)
+        scores = np.fromiter(
+            chain.from_iterable(m.values() for m in doc_maps),
+            dtype=np.float32, count=total)
+        if int(tokens.min()) < 0:  # OOV docs → exact string pipeline
+            docnos = np.array(list(chain.from_iterable(doc_maps)))
+            return self._make_buffer(list(qids), counts, docnos, scores)
+        return self._buffer_from_exact_tokens(list(qids), counts, tokens,
+                                              scores)
+
+    def _make_buffer(self, qids: List[str], counts: np.ndarray,
+                     docnos: np.ndarray, scores: np.ndarray) -> RunBuffer:
+        """Exact string tokenization core: grouped flat arrays → RunBuffer."""
+        nq = len(qids)
+        total = int(counts.sum())
+        gidx = np.fromiter((self._qid_index[q] for q in qids),
+                           dtype=np.int64, count=nq)
+        qidx = np.repeat(np.arange(nq, dtype=np.int64), counts)
+        qptr = np.zeros(nq + 1, dtype=np.int64)
+        np.cumsum(counts, out=qptr[1:])
+        col = np.arange(total, dtype=np.int64) - qptr[qidx]
+
+        # ONE searchsorted against the interned vocabulary.
+        v = len(self._vocab)
+        if v and total:
+            tok = np.searchsorted(self._vocab, docnos)
+            tok_c = np.minimum(tok, v - 1)
+            in_vocab = self._vocab[tok_c] == docnos
+            rel, judged = self._join_tokens(gidx, qidx, tok_c, in_vocab)
+        else:
+            rel = np.zeros(total, dtype=np.float32)
+            judged = np.zeros(total, dtype=bool)
+
+        # ONE lexicographic argsort for the trec_eval tie-break ranks
+        # (score ties broken by docno descending → smaller rank wins).
+        tiebreak = self._desc_ranks(np.lexsort((docnos, qidx)), qidx, qptr,
+                                    counts)
+        return RunBuffer(qids, gidx, qidx, col, counts, rel, judged, tiebreak,
+                         scores)
+
+    def _buffer_from_exact_tokens(self, qids: List[str], counts: np.ndarray,
+                                  tokens: np.ndarray,
+                                  scores: np.ndarray) -> RunBuffer:
+        """Integer-only tokenization core: every docno is in the vocabulary.
+
+        Token order equals lexicographic docno order (the vocabulary is
+        sorted), so tie-break ranks come from a counting sort over the unique
+        ``(query, token)`` keys — O(n + Q·V), no comparison sort at all —
+        and the qrel join is a table gather (or one integer searchsorted).
+        """
+        nq = len(qids)
+        total = int(counts.sum())
+        v = len(self._vocab)
+        gidx = np.fromiter((self._qid_index[q] for q in qids),
+                           dtype=np.int64, count=nq)
+        qidx = np.repeat(np.arange(nq, dtype=np.int64), counts)
+        qptr = np.zeros(nq + 1, dtype=np.int64)
+        np.cumsum(counts, out=qptr[1:])
+        col = np.arange(total, dtype=np.int64) - qptr[qidx]
+
+        rel, judged = self._join_tokens(
+            gidx, qidx, tokens, np.ones(total, dtype=bool))
+
+        key = qidx * np.int64(v) + tokens  # unique: docnos unique per query
+        if nq * v <= self._COUNTING_RANK_CAP:
+            # counting-sort rank: position of each key in sorted order
+            asc = np.cumsum(np.bincount(key, minlength=nq * v))[key] - 1
+            asc -= qptr[qidx]
+        else:
+            order = np.argsort(key)
+            asc = np.empty(total, dtype=np.int64)
+            asc[order] = np.arange(total, dtype=np.int64)
+            asc -= qptr[qidx]
+        tiebreak = (counts[qidx] - 1 - asc).astype(np.int32)
+        return RunBuffer(qids, gidx, qidx, col, counts, rel, judged, tiebreak,
+                         scores)
+
+    def _join_tokens(self, gidx, qidx, tok_c, in_vocab):
+        """Vectorized run→qrel join on (query, token) keys: one table gather
+        when the dense tables fit, one integer searchsorted otherwise."""
+        total = qidx.shape[0]
+        rel = np.zeros(total, dtype=np.float32)
+        judged = np.zeros(total, dtype=bool)
+        if not len(self._qrel_key) or not total:
+            return rel, judged
+        key = gidx[qidx] * np.int64(len(self._vocab)) + tok_c
+        if self._rel_table is not None:
+            rel = np.where(in_vocab, self._rel_table[key], 0.0)
+            judged = in_vocab & self._judged_table[key]
+            return rel, judged
+        pos = np.searchsorted(self._qrel_key, key)
+        pos_c = np.minimum(pos, len(self._qrel_key) - 1)
+        hit = in_vocab & (self._qrel_key[pos_c] == key)
+        rel[hit] = self._qrel_val[pos_c[hit]]
+        judged = hit
+        return rel, judged
+
+    @staticmethod
+    def _desc_ranks(order, qidx, qptr, counts) -> np.ndarray:
+        """Per-query descending ranks from an ascending within-query sort."""
+        total = qidx.shape[0]
+        asc = np.arange(total, dtype=np.int64) - qptr[qidx[order]]
+        tiebreak = np.empty(total, dtype=np.int32)
+        tiebreak[order] = (counts[qidx[order]] - 1 - asc).astype(np.int32)
+        return tiebreak
+
+    # -- reference (seed) densifier, kept for benchmarks + bit-identity ------
+
+    def _ensure_reference_state(self) -> None:
+        if self._reference_state_built:
+            return
+        self._qstats = {}
+        self._qrel_sorted = {}
+        for qid, docs in self._qrel.items():
+            rels = np.array(sorted(docs.values(), reverse=True),
+                            dtype=np.float32)
+            n_rel = float((rels >= self.relevance_level).sum())
+            n_nonrel = float(len(rels)) - n_rel
+            self._qstats[qid] = (rels, n_rel, n_nonrel)
+            docnos = np.array(list(docs.keys()))
+            vals = np.fromiter(docs.values(), dtype=np.float32,
+                               count=len(docs))
+            order = np.argsort(docnos)
+            self._qrel_sorted[qid] = (docnos[order], vals[order])
+        self._reference_state_built = True
+
+    def _densify_reference(self, run: RunType, qids: Sequence[str]):
+        """The seed per-query-loop densifier (unchanged semantics)."""
+        self._ensure_reference_state()
         nq = len(qids)
         max_d = max(len(run[q]) for q in qids)
         max_j = max(len(self._qstats[q][0]) for q in qids)
@@ -149,14 +581,24 @@ class RelevanceEvaluator:
             n_rel[i], n_nonrel[i] = r, n
             qmask[i] = True
 
-        # numpy arrays go straight into the jitted call (single transfer);
-        # no intermediate per-array device_put.
         batch = M.EvalBatch(
             scores=scores, tiebreak=tiebreak, rel=rel, judged=judged,
             mask=mask, ideal_rel=ideal, n_rel=n_rel,
             n_judged_nonrel=n_nonrel, query_mask=qmask,
         )
         return batch, qmask
+
+    # -- output ---------------------------------------------------------------
+
+    def _emit(self, out: Dict[str, Dict[str, float]], qids: Sequence[str],
+              batch: M.EvalBatch) -> None:
+        per_query = M.compute_measures_jit(batch, self.measures,
+                                           self.relevance_level)
+        nq = len(qids)
+        cols = {k: np.asarray(per_query[k])[:nq].tolist()
+                for k in self.measure_keys}
+        for i, qid in enumerate(qids):
+            out[qid] = {k: cols[k][i] for k in self.measure_keys}
 
 
 def aggregate_results(results: Dict[str, Dict[str, float]]) -> Dict[str, float]:

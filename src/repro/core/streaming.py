@@ -53,6 +53,31 @@ def metric_update(
     return new
 
 
+def metric_update_run(
+    state: MetricState,
+    evaluator,
+    buf,
+    scores,
+    measure_names: Tuple[str, ...],
+    relevance_level: float | None = None,
+) -> MetricState:
+    """In-loop update from a pre-tokenized ``RunBuffer`` + fresh scores.
+
+    The session fast path for evaluating the *same* collection every step:
+    ``evaluator.tokenize_run`` (or ``buffer_from_tokens``) paid the string
+    cost once; each step here is a numeric scatter
+    (``evaluator.batch_from_buffer``) plus the jitted measure core.
+    ``scores`` is the flat per-document score array in the buffer's query
+    order.  ``relevance_level`` defaults to the evaluator's own level — the
+    buffer's qrel-side statistics (R, judged-non-relevant) were counted at
+    that level, so overriding it only makes sense for matching evaluators.
+    """
+    if relevance_level is None:
+        relevance_level = evaluator.relevance_level
+    batch = evaluator.batch_from_buffer(buf, scores)
+    return metric_update(state, batch, measure_names, relevance_level)
+
+
 def metric_finalize(state: MetricState, axis_name: str | None = None) -> Dict[str, jax.Array]:
     """Means over all queries; cross-device reduce if ``axis_name`` given."""
     count = state["__count"]

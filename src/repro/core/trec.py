@@ -10,7 +10,9 @@ Formats (whitespace separated):
 
 from __future__ import annotations
 
-from typing import Dict, Mapping, TextIO
+from typing import Dict, Mapping, TextIO, Tuple
+
+import numpy as np
 
 
 def parse_qrel(fh: TextIO) -> Dict[str, Dict[str, int]]:
@@ -37,6 +39,46 @@ def parse_run(fh: TextIO) -> Dict[str, Dict[str, float]]:
         qid, _, docno, _rank, score, _tag = parts
         run.setdefault(qid, {})[docno] = float(score)
     return run
+
+
+def parse_run_arrays(fh: TextIO) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Parse a TREC run straight into flat ``(qids, docnos, scores)`` arrays.
+
+    The tokenized-ingest fast path: the arrays feed
+    ``RelevanceEvaluator.buffer_from_arrays`` directly, so a run file becomes
+    a pre-tokenized :class:`~repro.core.evaluator.RunBuffer` without ever
+    materializing a dict-of-dicts.  Rows are returned as-is; duplicate
+    ``(qid, docno)`` pairs are the caller's responsibility (trec_eval rejects
+    them, dict parsing keeps the last).
+    """
+    qids, docnos, scores = [], [], []
+    for line in fh:
+        parts = line.split()
+        if not parts:
+            continue
+        if len(parts) != 6:
+            raise ValueError(f"malformed run line: {line!r}")
+        qids.append(parts[0])
+        docnos.append(parts[2])
+        scores.append(parts[4])
+    return (np.array(qids), np.array(docnos),
+            np.array(scores, dtype=np.float32))
+
+
+def parse_qrel_arrays(fh: TextIO) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Parse a TREC qrel into flat ``(qids, docnos, rels)`` arrays."""
+    qids, docnos, rels = [], [], []
+    for line in fh:
+        parts = line.split()
+        if not parts:
+            continue
+        if len(parts) != 4:
+            raise ValueError(f"malformed qrel line: {line!r}")
+        qids.append(parts[0])
+        docnos.append(parts[2])
+        rels.append(int(parts[3]))
+    return (np.array(qids), np.array(docnos),
+            np.array(rels, dtype=np.int32))
 
 
 def write_qrel(fh: TextIO, qrel: Mapping[str, Mapping[str, int]]) -> None:

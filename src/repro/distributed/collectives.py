@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import shard_map
 from repro.train import compression
 
 
@@ -82,6 +83,6 @@ def sharded_evaluate(batch, measures: Tuple[str, ...], mesh,
     in_specs = M.EvalBatch(
         scores=dspec, tiebreak=dspec, rel=dspec, judged=dspec, mask=dspec,
         ideal_rel=dspec, n_rel=qspec, n_judged_nonrel=qspec, query_mask=qspec)
-    return jax.shard_map(
+    return shard_map(
         local_eval, mesh=mesh, in_specs=(in_specs,),
         out_specs=P(), check_vma=False)(batch)

@@ -146,7 +146,9 @@ def moe_apply(x, params, cfg: MoEConfig, *, mesh=None,
 
     wspec_gate = P(model_axis, None, fsdp_axis)
     wspec_down = P(model_axis, fsdp_axis, None)
-    out = jax.shard_map(
+    from repro.distributed import shard_map
+
+    out = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(data_axes, None), P(), wspec_gate, wspec_gate, wspec_down),

@@ -1,0 +1,216 @@
+"""Conformance golden tests: TREC-format fixtures → RelevanceEvaluator must
+reproduce hand-verified trec_eval values for every SUPPORTED_MEASURES family
+(including ``iprec_at_recall`` and ``success``, which the unit tests in
+``test_measures.py`` do not cover).
+
+The fixture (tests/fixtures/conformance.{qrel,run}) is small enough to rank
+by hand.  trec_eval orders by score descending, ties broken by docno
+descending, so:
+
+* q1 run = APPLE:3, CHERRY:2, MANGO:2, BANANA:1 with qrels
+  APPLE=2, BANANA=1, CHERRY=0, DATE=1 (DATE unretrieved, MANGO unjudged).
+  The 2.0 tie puts MANGO before CHERRY ('M' > 'C').
+  Ranking: APPLE(2), MANGO(unjudged), CHERRY(0), BANANA(1); R=3.
+* q2 run = EGG:2, APPLE:1 with qrels APPLE=1, EGG=0.
+  Ranking: EGG(0), APPLE(1); R=1.
+
+``EXPECTED`` below holds explicit hand-computed goldens for the interesting
+keys; the remaining cutoffs of each family are derived from the hand-written
+rank/judgment sequences by ``_trec_eval_reference`` — a ~50-line
+reimplementation of trec_eval's definitions that is independent of both
+``repro.core`` and ``repro.baselines``.
+"""
+
+import math
+import os
+
+import pytest
+
+from repro.core import (RelevanceEvaluator, measure_keys, supported_measures,
+                        trec)
+from repro.core.measures import (DEFAULT_CUTOFFS, IPREC_LEVELS,
+                                 SUCCESS_CUTOFFS)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+#: judgments in trec_eval rank order (None = unjudged), hand-derived above
+RANKED = {
+    "q1": {"rels": [2, None, 0, 1], "R": 3, "N": 1, "ideal": [2, 1, 1, 0]},
+    "q2": {"rels": [0, 1], "R": 1, "N": 1, "ideal": [1, 0]},
+}
+
+LOG2_3 = math.log2(3)
+LOG2_5 = math.log2(5)
+
+#: explicit golden values (trec_eval semantics, computed by hand)
+EXPECTED = {
+    "q1": {
+        "map": 0.5,  # (1/1 + 2/4) / 3
+        "recip_rank": 1.0,
+        "Rprec": 1 / 3,  # 1 relevant in the top R=3
+        "bpref": 1 / 3,  # APPLE clean, BANANA below 1 nonrel (bound 1)
+        "ndcg": (2 + 1 / LOG2_5) / (2 + 1 / LOG2_3 + 0.5),
+        "P_5": 0.4,
+        "recall_5": 2 / 3,
+        "success_1": 1.0,
+        "num_ret": 4.0,
+        "num_rel": 3.0,
+        "num_rel_ret": 2.0,
+        "map_cut_5": 0.5,
+        "ndcg_cut_5": (2 + 1 / LOG2_5) / (2 + 1 / LOG2_3 + 0.5),
+        # 11-pt interpolated precision: recall 1/3 at rank 1 (prec 1.0),
+        # recall 2/3 at rank 4 (prec 0.5), recall 1.0 never reached.
+        "iprec_at_recall_0.00": 1.0,
+        "iprec_at_recall_0.30": 1.0,
+        "iprec_at_recall_0.40": 0.5,
+        "iprec_at_recall_0.60": 0.5,
+        "iprec_at_recall_0.70": 0.0,
+        "iprec_at_recall_1.00": 0.0,
+    },
+    "q2": {
+        "map": 0.5,
+        "recip_rank": 0.5,
+        "Rprec": 0.0,  # rank-1 doc (EGG) is non-relevant
+        "bpref": 0.0,  # the one relevant doc sits below the one nonrel
+        "ndcg": 1 / LOG2_3,
+        "P_5": 0.2,
+        "recall_5": 1.0,
+        "success_1": 0.0,
+        "success_5": 1.0,
+        "num_ret": 2.0,
+        "num_rel": 1.0,
+        "num_rel_ret": 1.0,
+        # all recall levels are reached at rank 2 with prec 0.5
+        "iprec_at_recall_0.00": 0.5,
+        "iprec_at_recall_0.50": 0.5,
+        "iprec_at_recall_1.00": 0.5,
+    },
+}
+
+
+def _trec_eval_reference(rels, R, N, ideal):
+    """All supported measure keys from a hand-written ranked judgment list."""
+    level = 1
+    binrel = [r is not None and r >= level for r in rels]
+    cum = []
+    c = 0
+    for b in binrel:
+        c += b
+        cum.append(c)
+    n_ret = len(rels)
+    prec = [cum[i] / (i + 1) for i in range(n_ret)]
+    out = {
+        "num_ret": float(n_ret),
+        "num_rel": float(R),
+        "num_rel_ret": float(cum[-1]) if cum else 0.0,
+        "map": sum(p for p, b in zip(prec, binrel) if b) / R if R else 0.0,
+        "recip_rank": next((1.0 / (i + 1) for i, b in enumerate(binrel) if b),
+                           0.0),
+        "Rprec": (cum[min(R, n_ret) - 1] / R) if R and n_ret else 0.0,
+    }
+    # bpref
+    bp, nonrel_above = 0.0, 0
+    for r, b in zip(rels, binrel):
+        if b:
+            bp += (1.0 - min(nonrel_above, R) / min(R, N)
+                   if nonrel_above else 1.0)
+        elif r is not None:
+            nonrel_above += 1
+    out["bpref"] = bp / R if R else 0.0
+    # ndcg family (linear gain)
+    dcg = [0.0]
+    for i, r in enumerate(rels):
+        dcg.append(dcg[-1] + ((r or 0) / math.log2(i + 2) if r and r > 0
+                              else 0.0))
+    idcg = [0.0]
+    for i, r in enumerate(ideal):
+        idcg.append(idcg[-1] + (r / math.log2(i + 2) if r > 0 else 0.0))
+    out["ndcg"] = dcg[-1] / idcg[-1] if idcg[-1] > 0 else 0.0
+    for k in DEFAULT_CUTOFFS:
+        ck, ick = dcg[min(k, n_ret)], idcg[min(k, len(ideal))]
+        out[f"ndcg_cut_{k}"] = ck / ick if ick > 0 else 0.0
+        out[f"P_{k}"] = (cum[min(k, n_ret) - 1] if n_ret else 0) / k
+        out[f"recall_{k}"] = ((cum[min(k, n_ret) - 1] / R)
+                              if R and n_ret else 0.0)
+        ap_k = sum(p for i, (p, b) in enumerate(zip(prec, binrel))
+                   if b and i < k)
+        out[f"map_cut_{k}"] = ap_k / R if R else 0.0
+    for k in SUCCESS_CUTOFFS:
+        out[f"success_{k}"] = float(n_ret and cum[min(k, n_ret) - 1] > 0)
+    for lv in IPREC_LEVELS:
+        target = math.ceil(lv * R)
+        best = 0.0
+        for i in range(n_ret):
+            if cum[i] >= target:
+                best = max(prec[i:])
+                break
+        out[f"iprec_at_recall_{lv:.2f}"] = best if R else 0.0
+    return out
+
+
+@pytest.fixture(scope="module")
+def fixture_results():
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    return ev.evaluate(run)
+
+
+def test_fixture_parses_as_expected():
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    assert qrel == {"q1": {"APPLE": 2, "BANANA": 1, "CHERRY": 0, "DATE": 1},
+                    "q2": {"APPLE": 1, "EGG": 0}}
+    assert run["q1"]["MANGO"] == 2.0 and len(run["q2"]) == 2
+
+
+def test_hand_verified_goldens(fixture_results):
+    for qid, expected in EXPECTED.items():
+        for key, val in expected.items():
+            assert fixture_results[qid][key] == pytest.approx(val, abs=1e-5), \
+                (qid, key)
+
+
+def test_all_supported_measures_conform(fixture_results):
+    keys = measure_keys(supported_measures)
+    for qid, spec in RANKED.items():
+        want = _trec_eval_reference(spec["rels"], spec["R"], spec["N"],
+                                    spec["ideal"])
+        got = fixture_results[qid]
+        assert set(keys) <= set(got)
+        for key in keys:
+            assert got[key] == pytest.approx(want[key], abs=1e-5), (qid, key)
+
+
+def test_reference_densifier_conforms_too():
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    ev = RelevanceEvaluator(qrel, supported_measures, densify="reference")
+    res = ev.evaluate(run)
+    for qid, expected in EXPECTED.items():
+        for key, val in expected.items():
+            assert res[qid][key] == pytest.approx(val, abs=1e-5), (qid, key)
+
+
+def test_array_parse_path_conforms(fixture_results):
+    """parse_run_arrays → buffer_from_arrays is the tokenized ingest path."""
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    with open(os.path.join(FIXTURES, "conformance.run")) as fh:
+        qids, docnos, scores = trec.parse_run_arrays(fh)
+    assert len(qids) == 6
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    res = ev.evaluate_buffer(ev.buffer_from_arrays(qids, docnos, scores))
+    for qid in fixture_results:
+        for key in fixture_results[qid]:
+            assert res[qid][key] == pytest.approx(
+                fixture_results[qid][key], abs=1e-6), (qid, key)
+
+
+def test_qrel_array_parse_roundtrip():
+    with open(os.path.join(FIXTURES, "conformance.qrel")) as fh:
+        qids, docnos, rels = trec.parse_qrel_arrays(fh)
+    rebuilt = {}
+    for q, d, r in zip(qids.tolist(), docnos.tolist(), rels.tolist()):
+        rebuilt.setdefault(q, {})[d] = int(r)
+    assert rebuilt == trec.load_qrel(
+        os.path.join(FIXTURES, "conformance.qrel"))

@@ -1,0 +1,253 @@
+"""Densification equivalence: the vectorized run→EvalBatch pipeline must be
+*bit-identical* to the retained per-query reference densifier, and both must
+agree with the independent pure-Python trec_eval engine.
+
+Stress surface: duplicate scores (tie-breaks), unjudged (out-of-vocabulary)
+docs, empty-qrel queries, non-ASCII docnos, uneven ranking depths, and both
+join/rank regimes (dense table vs searchsorted, counting rank vs argsort).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.baselines import pure_eval
+from repro.core import RelevanceEvaluator, RunBuffer
+
+MEASURES = ("map", "ndcg", "ndcg_cut", "P", "recall", "recip_rank", "Rprec",
+            "bpref", "success", "map_cut", "num_ret", "num_rel",
+            "num_rel_ret")
+
+
+def _random_case(rng, with_oov=True, with_nonascii=True, with_ties=True,
+                 with_empty_qrel=True, max_docs=60):
+    run, qrel = {}, {}
+    nq = rng.randint(1, 8)
+    for qi in range(nq):
+        qid = f"q{qi}"
+        docs = [f"d{j:03d}" for j in range(rng.randint(1, max_docs))]
+        if with_nonascii:
+            docs += ["δοκίμιο", "文档-甲", "ß-umlaut"]
+        if with_oov:
+            docs += [f"oov{j}" for j in range(rng.randint(1, 4))]
+        rng.shuffle(docs)
+        score_pool = ([0.0, 0.5, 1.0, 2.0] if with_ties
+                      else [rng.random() for _ in docs])
+        run[qid] = {d: rng.choice(score_pool) + (0 if with_ties
+                                                 else rng.random())
+                    for d in docs}
+        judged = [d for d in docs if not d.startswith("oov")]
+        judged = rng.sample(judged, k=rng.randint(0, len(judged)))
+        qrel[qid] = {d: rng.randint(0, 3) for d in judged}
+        # judged-but-unretrieved docs (affect R and the ideal ranking)
+        for j in range(rng.randint(0, 4)):
+            qrel[qid][f"extra{j}"] = rng.randint(0, 2)
+        if not qrel[qid]:
+            qrel[qid]["extra0"] = 1
+    if with_empty_qrel:
+        qrel["q_empty"] = {}
+        run["q_empty"] = {"dX": 1.0, "dY": 1.0}
+    return run, qrel
+
+
+def _assert_bit_identical(run, qrel, measures=("map", "ndcg"), **ev_kw):
+    ev_vec = RelevanceEvaluator(qrel, measures, **ev_kw)
+    ev_ref = RelevanceEvaluator(qrel, measures, densify="reference", **ev_kw)
+    qids = [q for q in run if q in qrel]
+    batch_vec, _ = ev_vec._densify(run, qids)
+    batch_ref, _ = ev_ref._densify(run, qids)
+    for field in batch_vec._fields:
+        a = np.asarray(getattr(batch_vec, field))
+        b = np.asarray(getattr(batch_ref, field))
+        assert a.dtype == b.dtype, field
+        assert a.shape == b.shape, field
+        assert np.array_equal(a, b), (
+            field, np.argwhere(a != b)[:5].tolist())
+    return ev_vec
+
+
+def test_bit_identical_randomized():
+    rng = random.Random(1234)
+    for _ in range(12):
+        run, qrel = _random_case(rng)
+        _assert_bit_identical(run, qrel)
+
+
+def test_bit_identical_fully_judged_token_fast_path():
+    # No OOV docs → the integer counting-sort path; must still be identical.
+    rng = random.Random(7)
+    for _ in range(6):
+        run, qrel = _random_case(rng, with_oov=False, with_empty_qrel=False)
+        for qid in run:  # judge every retrieved doc
+            for d in run[qid]:
+                qrel[qid].setdefault(d, rng.randint(0, 2))
+        _assert_bit_identical(run, qrel)
+
+
+def test_bit_identical_searchsorted_regimes():
+    # Force the sparse join + argsort rank fallbacks via the caps.
+    rng = random.Random(99)
+    run, qrel = _random_case(rng)
+
+    class SmallCaps(RelevanceEvaluator):
+        _DENSE_JOIN_CAP = 0
+        _COUNTING_RANK_CAP = 0
+
+    ev_vec = SmallCaps(qrel, ("map", "ndcg"))
+    assert ev_vec._rel_table is None
+    ev_ref = RelevanceEvaluator(qrel, ("map", "ndcg"), densify="reference")
+    qids = [q for q in run if q in qrel]
+    bv, _ = ev_vec._densify(run, qids)
+    br, _ = ev_ref._densify(run, qids)
+    for field in bv._fields:
+        assert np.array_equal(np.asarray(getattr(bv, field)),
+                              np.asarray(getattr(br, field))), field
+
+
+def test_bit_identical_relevance_level_2():
+    rng = random.Random(5)
+    run, qrel = _random_case(rng)
+    _assert_bit_identical(run, qrel, relevance_level=2)
+
+
+def test_duplicate_scores_tie_break_exact():
+    # every score identical → ranking decided purely by docno desc-lex
+    docs = ["a", "B", "ähnlich", "Z9", "z1", "中文"]
+    qrel = {"q": {d: i % 2 for i, d in enumerate(docs)}}
+    run = {"q": {d: 1.0 for d in docs}}
+    ev = _assert_bit_identical(run, qrel, measures=MEASURES)
+    ours = ev.evaluate(run)["q"]
+    ref = pure_eval.evaluate(run, qrel, MEASURES)["q"]
+    for k, v in ref.items():
+        assert ours[k] == pytest.approx(v, abs=2e-4), k
+
+
+def test_matches_pure_python_engine_randomized():
+    rng = random.Random(31)
+    for _ in range(8):
+        run, qrel = _random_case(rng)
+        ev = RelevanceEvaluator(qrel, MEASURES)
+        ours = ev.evaluate(run)
+        ref = pure_eval.evaluate(
+            {q: d for q, d in run.items() if qrel.get(q)},
+            qrel, MEASURES)
+        for qid in ref:
+            for key, val in ref[qid].items():
+                assert ours[qid][key] == pytest.approx(val, abs=2e-4), \
+                    (qid, key)
+
+
+def test_empty_qrel_query_all_zero():
+    qrel = {"q": {}}
+    run = {"q": {"d1": 2.0, "d2": 1.0}}
+    ev = _assert_bit_identical(run, qrel, measures=("map", "ndcg", "num_ret"))
+    res = ev.evaluate(run)["q"]
+    assert res["map"] == 0.0 and res["ndcg"] == 0.0
+    assert res["num_ret"] == 2.0
+
+
+def test_evaluate_many_sequence_and_mapping():
+    qrel = {"q": {"d1": 1, "d2": 0}}
+    ev = RelevanceEvaluator(qrel, ("map",))
+    run_a = {"q": {"d1": 2.0, "d2": 1.0}}
+    run_b = {"q": {"d1": 1.0, "d2": 2.0}}
+    seq = ev.evaluate_many([run_a, run_b])
+    assert seq[0]["q"]["map"] == pytest.approx(1.0)
+    assert seq[1]["q"]["map"] == pytest.approx(0.5)
+    named = ev.evaluate_many({"a": run_a, "b": run_b})
+    assert named["a"] == seq[0] and named["b"] == seq[1]
+
+
+def test_run_buffer_matches_evaluate():
+    rng = random.Random(77)
+    run, qrel = _random_case(rng)
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg", "recip_rank"))
+    want = ev.evaluate(run)
+    buf = ev.tokenize_run(run)
+    assert isinstance(buf, RunBuffer)
+    got = ev.evaluate_buffer(buf)
+    assert got.keys() == want.keys()
+    for qid in want:
+        for k in want[qid]:
+            assert got[qid][k] == pytest.approx(want[qid][k], abs=1e-7), \
+                (qid, k)
+
+
+def test_run_buffer_fresh_scores_no_string_work():
+    qrel = {"q1": {"d1": 1, "d2": 0, "d3": 2}, "q2": {"d1": 1}}
+    run = {"q1": {"d1": 1.0, "d2": 3.0, "d3": 2.0}, "q2": {"d1": 0.5}}
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg"))
+    buf = ev.tokenize_run(run)
+    # flip q1's ordering via fresh flat scores (buffer's query order)
+    new_scores = np.array([3.0, 1.0, 2.0, 0.5], dtype=np.float32)
+    got = ev.evaluate_buffer(buf, new_scores)
+    want = ev.evaluate({"q1": {"d1": 3.0, "d2": 1.0, "d3": 2.0},
+                        "q2": {"d1": 0.5}})
+    for qid in want:
+        for k in want[qid]:
+            assert got[qid][k] == pytest.approx(want[qid][k]), (qid, k)
+
+
+def test_buffer_from_tokens_pretokenized():
+    qrel = {"q": {"a": 1, "b": 0, "c": 2}}
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg", "recip_rank"))
+    vocab = ev.vocab.tolist()
+    docs = ["c", "a", "b"]
+    tokens = np.array([vocab.index(d) for d in docs], dtype=np.int64)
+    scores = np.array([1.0, 3.0, 2.0], dtype=np.float32)
+    buf = ev.buffer_from_tokens(["q"], [3], tokens, scores)
+    got = ev.evaluate_buffer(buf)["q"]
+    want = ev.evaluate({"q": dict(zip(docs, scores.tolist()))})["q"]
+    for k in want:
+        assert got[k] == pytest.approx(want[k]), k
+
+
+def test_buffer_from_tokens_oov_and_validation():
+    qrel = {"q": {"a": 1}}
+    ev = RelevanceEvaluator(qrel, ("map", "num_ret"))
+    # OOV doc (-1) is unjudged but still counts as retrieved
+    buf = ev.buffer_from_tokens(["q"], [2], np.array([0, -1]),
+                                np.array([1.0, 2.0], np.float32))
+    res = ev.evaluate_buffer(buf)["q"]
+    assert res["num_ret"] == 2.0
+    assert res["map"] == pytest.approx(0.5)  # "a" ranked second
+    with pytest.raises(KeyError):
+        ev.buffer_from_tokens(["nope"], [1], np.array([0]))
+    with pytest.raises(ValueError):
+        ev.buffer_from_tokens(["q"], [2], np.array([0]))
+
+
+def test_buffer_from_arrays_matches_dict_path():
+    qrel = {"q1": {"d1": 1, "d2": 0}, "q2": {"d9": 2}}
+    run = {"q1": {"d1": 0.3, "d2": 0.9}, "q2": {"d9": 1.0, "dx": 2.0}}
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg"))
+    qids, docnos, scores = [], [], []
+    for q, docs in run.items():
+        for d, s in docs.items():
+            qids.append(q), docnos.append(d), scores.append(s)
+    # extra row for an unjudged query must be dropped
+    qids.append("q_unknown"), docnos.append("d1"), scores.append(9.0)
+    buf = ev.buffer_from_arrays(np.array(qids), np.array(docnos),
+                                np.array(scores, np.float32))
+    got = ev.evaluate_buffer(buf)
+    want = ev.evaluate(run)
+    assert got.keys() == want.keys()
+    for qid in want:
+        for k in want[qid]:
+            assert got[qid][k] == pytest.approx(want[qid][k]), (qid, k)
+
+
+def test_streaming_metric_update_run():
+    from repro.core import measures as M
+    from repro.core import streaming
+
+    qrel = {"q1": {"d1": 1, "d2": 0}, "q2": {"d3": 1}}
+    run = {"q1": {"d1": 2.0, "d2": 1.0}, "q2": {"d3": 1.0, "d4": 2.0}}
+    ev = RelevanceEvaluator(qrel, ("recip_rank",))
+    buf = ev.tokenize_run(run)
+    state = streaming.metric_init(("recip_rank",))
+    state = streaming.metric_update_run(state, ev, buf, buf.scores,
+                                        ("recip_rank",))
+    means = streaming.metric_finalize(state)
+    assert float(means["recip_rank"]) == pytest.approx((1.0 + 0.5) / 2)

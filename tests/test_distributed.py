@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -52,6 +54,7 @@ def test_compressed_psum_dp_equivalence():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed import shard_map
         from repro.distributed.collectives import compressed_psum
         from repro.train import compression
 
@@ -64,7 +67,7 @@ def test_compressed_psum_dp_equivalence():
                 err = compression.init_error_state(grads)
                 out, _ = compressed_psum(grads, "data", method, err)
                 return out["w"]
-            return jax.jit(jax.shard_map(
+            return jax.jit(shard_map(
                 f, mesh=mesh, in_specs=P("data", None),
                 out_specs=P("data", None), check_vma=False))(g)
 

@@ -2,6 +2,10 @@
 
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import numpy as np
 from hypothesis import given, settings, strategies as st
 

@@ -2,9 +2,12 @@
 engine (core.measures) — including ties, unjudged docs, padding, and graded
 relevance."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import measures as M

@@ -8,12 +8,15 @@ pytrec_eval promise (evaluation cheap enough to run every step) end to end.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.common import smoke_shape
 from repro.data import lm_data, recsys_data
 from repro.launch.api import get_arch
 from repro.train import checkpoint as C
 from repro.train.trainer import TrainConfig, Trainer
+
+pytestmark = pytest.mark.slow
 
 
 def _init_from_bundle(bundle, rng=np.random.default_rng(0)):

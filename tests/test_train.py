@@ -14,6 +14,8 @@ from repro.train import compression as Z
 from repro.train import optimizer as O
 from repro.train.trainer import StragglerMonitor, TrainConfig, Trainer
 
+pytestmark = pytest.mark.slow
+
 
 def test_adamw_converges_on_quadratic():
     init, update = O.adamw(O.OptimizerConfig(
