@@ -1,0 +1,19 @@
+# Convenience targets; `make verify` is the documented pre-merge check
+# (tier-1 pytest + a 2-device sharded smoke test).
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test test-all bench
+
+verify:
+	$(PYTHON) -m repro.dev verify
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-all:
+	$(PYTHON) -m pytest -q -m ""
+
+bench:
+	$(PYTHON) -m benchmarks.run

@@ -1,6 +1,10 @@
 """RQ1 (paper Fig. 1): speedup of in-process evaluation over the
 serialize-invoke-parse workflow, across query/doc grid sizes and storages.
 
+Also hosts the ``densify`` segment (:func:`densify`) — the run→``EvalBatch``
+conversion cost in isolation, comparing the seed per-query loop, the
+vectorized cold dict ingest, and the pre-tokenized session path.
+
 The paper's protocol, reproduced: rankings synthesized with distinct integer
 scores and relevance 1 (``synthesize_run``); the run is serialized unsorted;
 the child's stdout is read into a string but not parsed; speedup =

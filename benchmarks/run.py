@@ -1,6 +1,19 @@
-"""Benchmark driver — one section per paper table/figure.
+"""Benchmark driver — one section per paper table/figure plus system segments.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Segments (repeat ``--only`` to pick several):
+
+* ``rq1``       — paper Fig. 1: in-process vs serialize-invoke-parse grid.
+* ``rq2``       — paper Fig. 2: tiny-ranking crossover vs trec_eval.
+* ``densify``   — run→``EvalBatch`` conversion in isolation: seed per-query
+  loop vs the vectorized flat pipeline (cold dict ingest) vs the
+  pre-tokenized session path (``batch_from_buffer`` on a ``RunBuffer``).
+* ``sharded``   — multi-device scaling of the sharded evaluation pipeline
+  (``repro.distributed.sharded_evaluator``) over 1/2/4/8 host-platform
+  devices; subprocess-per-device-count, see ``bench_sharded``.
+* ``qlearning`` — the paper's RL demo, episodes/s.
+* ``batched``   — dense batched evaluation vs the dict API.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a JSON dump under
 experiments/bench_results.json for EXPERIMENTS.md).
@@ -18,16 +31,22 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (20 reps, 10k queries)")
     ap.add_argument("--only", action="append", default=None,
-                    choices=("rq1", "rq2", "densify", "qlearning", "batched"))
+                    choices=("rq1", "rq2", "densify", "sharded", "qlearning",
+                             "batched"),
+                    help="segment to run (repeatable; default: all): "
+                         "rq1/rq2 = paper figures, densify = run->EvalBatch "
+                         "conversion paths, sharded = multi-device scaling, "
+                         "qlearning = RL demo, batched = dense batched eval")
     args = ap.parse_args(argv)
 
     from benchmarks import bench_batched, bench_qlearning, bench_rq1, \
-        bench_rq2
+        bench_rq2, bench_sharded
 
     suites = {
         "rq1": bench_rq1.run,
         "rq2": bench_rq2.run,
         "densify": bench_rq1.densify,
+        "sharded": bench_sharded.run,
         "qlearning": bench_qlearning.run,
         "batched": bench_batched.run,
     }
@@ -54,6 +73,11 @@ def main(argv=None) -> None:
         print(f"densify_q{row['n_queries']}_d{row['n_docs']},"
               f"{row['session_us']:.1f},"
               f"speedup={row['speedup_densify']:.2f}")
+    for row in results.get("sharded", []):
+        sp = row.get("speedup_vs_1dev")
+        sp_str = f"{sp:.2f}" if sp is not None else "nan"
+        print(f"sharded_dev{row['devices']},{row['sharded_us']:.1f},"
+              f"speedup={sp_str}")
     for row in results.get("qlearning", []):
         print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
               f"tail_reward={row['tail_avg_reward']:+.4f}")

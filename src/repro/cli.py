@@ -1,0 +1,176 @@
+"""trec_eval-compatible command line: ``python -m repro <qrel> <run>``.
+
+Drop-in replacement for the subprocess invocation the paper benchmarks
+against::
+
+    python -m repro [-q] [-c] [-l N] [-m MEASURE ...] [--sharded] qrel run
+
+Flags mirror trec_eval:
+
+* ``-q`` — print per-query results (query-major blocks, run-file order)
+  before the ``all`` summary.
+* ``-c`` — average over every query in the qrels; queries with no results
+  contribute 0 to every measure (and their R to ``num_rel``).
+* ``-l N`` — relevance level: judgments >= N count as relevant (default 1).
+* ``-m MEASURE`` — repeatable measure selector: a family (``map``,
+  ``ndcg_cut``), a parameterized family (``P.5,10``), an output-style key
+  (``ndcg_cut_10``), or ``all`` (every supported measure, the default).
+* ``--sharded`` — run the multi-device pipeline
+  (``repro.distributed.sharded_evaluator``) instead of the single-device
+  evaluator; results are bit-identical, so output does not change.
+
+Output format is trec_eval's: ``measure<tab>qid<tab>value`` with the measure
+name left-justified to 22 columns, floats printed with 4 decimals and the
+count measures (``num_q``, ``num_ret``, ``num_rel``, ``num_rel_ret``) as
+integers.  In the summary, count measures are sums over queries; everything
+else is the arithmetic mean.  ``runid`` is the tag column of the run file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (RelevanceEvaluator, measures as M, supported_measures,
+                        trec)
+
+#: summary/per-query print order (trec_eval prints its registry order; ours
+#: is fixed here so output is stable under any -m combination)
+FAMILY_ORDER = (
+    "num_ret", "num_rel", "num_rel_ret", "map", "Rprec", "bpref",
+    "recip_rank", "iprec_at_recall", "P", "recall", "ndcg", "ndcg_cut",
+    "map_cut", "success",
+)
+
+#: measures printed as integers (trec_eval uses %ld for these)
+INT_MEASURES = frozenset({"num_q", "num_ret", "num_rel", "num_rel_ret"})
+
+#: measures summarized by summation rather than the mean over queries
+SUM_MEASURES = frozenset({"num_ret", "num_rel", "num_rel_ret"})
+
+
+def ordered_keys(measures: Sequence[str]) -> List[str]:
+    """Output keys for a measure set, in trec_eval print order."""
+    # parse_measures yields one (family, params) entry per selector, so
+    # repeated same-family selectors (-m P_5 -m P_10) must merge, not
+    # overwrite each other.
+    parsed: Dict[str, tuple] = {}
+    for fam, params in M.parse_measures(measures):
+        parsed[fam] = tuple(sorted(set(parsed.get(fam, ()) + params)))
+    keys: List[str] = []
+    for fam in FAMILY_ORDER:
+        if fam not in parsed:
+            continue
+        params = parsed[fam]
+        if not params:
+            keys.append(fam)
+        elif fam == "iprec_at_recall":
+            keys.extend(f"{fam}_{p:.2f}" for p in params)
+        else:
+            keys.extend(f"{fam}_{int(p)}" for p in params)
+    return keys
+
+
+def format_line(measure: str, qid: str, value) -> str:
+    """One trec_eval output line: %-22s\\t%s\\t%value."""
+    if measure == "runid":
+        val = str(value)
+    elif measure in INT_MEASURES:
+        val = str(int(round(float(value))))
+    else:
+        val = f"{float(value):.4f}"
+    return f"{measure:<22}\t{qid}\t{val}"
+
+
+def _summarize(results: Dict[str, Dict[str, float]], keys: Sequence[str],
+               qrel: Dict[str, Dict[str, int]], complete: bool,
+               relevance_level: int) -> Dict[str, float]:
+    """The 'all' row: sums for count measures, means for the rest.
+
+    With ``complete`` (-c), queries judged in the qrels but absent from the
+    run divide every mean and contribute their R to ``num_rel``.
+    """
+    n_q = len(qrel) if complete else len(results)
+    summary: Dict[str, float] = {"num_q": float(n_q)}
+    denom = float(max(n_q, 1))
+    for k in keys:
+        total = sum(res[k] for res in results.values())
+        if k == "num_rel" and complete:
+            total += sum(
+                float(sum(r >= relevance_level for r in docs.values()))
+                for qid, docs in qrel.items() if qid not in results)
+        summary[k] = total if k in SUM_MEASURES else total / denom
+    return summary
+
+
+def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="trec_eval-compatible evaluation of a TREC run file "
+                    "against a qrel file (in-process, device-accelerated).")
+    ap.add_argument("qrel_path", metavar="qrel", help="TREC qrel file")
+    ap.add_argument("run_path", metavar="run", help="TREC run file")
+    ap.add_argument("-q", dest="per_query", action="store_true",
+                    help="print per-query results before the summary")
+    ap.add_argument("-c", dest="complete", action="store_true",
+                    help="average over all qrel queries (missing queries "
+                         "count as 0)")
+    ap.add_argument("-l", dest="level", type=int, default=1, metavar="N",
+                    help="relevance level: judgment >= N is relevant "
+                         "(default 1)")
+    ap.add_argument("-m", dest="measures", action="append", metavar="MEASURE",
+                    help="measure family/key (repeatable; default: all "
+                         "supported measures)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="evaluate with the multi-device sharded pipeline")
+    args = ap.parse_args(argv)
+    out = out or sys.stdout
+
+    selected = args.measures or ["all"]
+    if "all" in selected:
+        selected = sorted(supported_measures)
+    try:
+        keys = ordered_keys(selected)
+    except ValueError as e:
+        ap.error(str(e))
+
+    qrel = trec.load_qrel(args.qrel_path)
+    runid = trec.run_id(args.run_path)
+    ev = RelevanceEvaluator(qrel, selected, relevance_level=args.level)
+    # Tokenized ingest: run file → flat arrays → RunBuffer (no dict-of-dicts).
+    qids_arr, docnos, scores = trec.load_run_arrays(args.run_path)
+    # trec_eval rejects duplicate (qid, docno) rows; the array fast path does
+    # not re-check, so the CLI must (silently-wrong measures otherwise).
+    pairs = np.char.add(np.char.add(qids_arr.astype(str), "\x1f"),
+                        docnos.astype(str))
+    if np.unique(pairs).size != pairs.size:
+        ap.error(f"duplicate (qid, docno) rows in run file {args.run_path}")
+    buf = ev.buffer_from_arrays(qids_arr, docnos, scores)
+    if args.sharded:
+        from repro.distributed.sharded_evaluator import ShardedEvaluator
+
+        results = ShardedEvaluator(ev).evaluate_buffer(buf).per_query
+    else:
+        results = ev.evaluate_buffer(buf)
+
+    lines: List[str] = []
+    if args.per_query:
+        # Query-major blocks, queries in run-file first-appearance order.
+        for qid in dict.fromkeys(qids_arr.tolist()):
+            if qid not in results:
+                continue
+            lines.extend(
+                format_line(k, qid, results[qid][k]) for k in keys)
+    summary = _summarize(results, keys, qrel, args.complete, args.level)
+    lines.append(format_line("runid", "all", runid))
+    lines.append(format_line("num_q", "all", summary["num_q"]))
+    lines.extend(format_line(k, "all", summary[k]) for k in keys)
+    out.write("\n".join(lines) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -243,7 +243,18 @@ class RelevanceEvaluator:
     # -- pytrec_eval API -----------------------------------------------------
 
     def evaluate(self, run: RunType) -> Dict[str, Dict[str, float]]:
-        """Evaluate a run: {qid: {docno: score}} -> {qid: {measure: value}}."""
+        """Evaluate a run: ``{qid: {docno: score}}`` → ``{qid: {measure: value}}``.
+
+        The pytrec_eval-compatible entry point.  Only queries present in both
+        the run and the qrels are evaluated (intersection semantics); docnos
+        absent from the qrels count as unjudged/non-relevant.  Scores may be
+        any floats — ranking is by descending score with trec_eval's
+        descending-docno tie-break.  Values are plain Python floats.
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'map'})
+        >>> ev.evaluate({'q1': {'d1': 0.2, 'd2': 0.9}})['q1']['map']
+        0.5
+        """
         qids = [q for q in run if q in self._qrel]
         if not qids:
             return {}
@@ -264,6 +275,12 @@ class RelevanceEvaluator:
         and the jit cache are shared across all runs.  Accepts either a
         mapping ``{run_name: run}`` (returns a mapping of results) or a
         sequence of runs (returns a list of results).
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'recip_rank'})
+        >>> res = ev.evaluate_many({'a': {'q1': {'d1': 1.0, 'd2': 0.5}},
+        ...                         'b': {'q1': {'d1': 0.5, 'd2': 1.0}}})
+        >>> res['a']['q1']['recip_rank'], res['b']['q1']['recip_rank']
+        (1.0, 0.5)
         """
         if isinstance(runs, Mapping):
             return {name: self.evaluate(r) for name, r in runs.items()}
@@ -272,7 +289,20 @@ class RelevanceEvaluator:
     # -- session API: pre-tokenized runs -------------------------------------
 
     def tokenize_run(self, run: RunType) -> RunBuffer:
-        """Do the string work for a run once, yielding a reusable buffer."""
+        """Do the string work for a run once, yielding a reusable buffer.
+
+        ``run`` is a ``{qid: {docno: score}}`` mapping; queries absent from
+        the qrels are dropped (same intersection semantics as
+        :meth:`evaluate`).  The returned :class:`RunBuffer` keeps documents in
+        query-major dict-iteration order — that is the flat order fresh
+        ``scores`` passed to :meth:`evaluate_buffer` /
+        :meth:`batch_from_buffer` must follow.
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'map'})
+        >>> buf = ev.tokenize_run({'q1': {'d1': 1.0, 'd2': 0.5}})
+        >>> len(buf), buf.counts.tolist()
+        (1, [2])
+        """
         return self._tokenize_chunk(run, [q for q in run if q in self._qrel])
 
     def buffer_from_arrays(self, qids, docnos, scores) -> RunBuffer:
@@ -284,6 +314,19 @@ class RelevanceEvaluator:
         arrive in any order; queries are grouped with a stable sort, and rows
         for queries absent from the qrels are dropped (pytrec_eval
         intersection semantics).
+
+        Shapes/dtypes: all three arguments are flat, equal-length 1-D arrays
+        — ``qids`` and ``docnos`` string-convertible, ``scores`` cast to
+        float32.  ``(qid, docno)`` pairs must be unique (trec_eval rejects
+        duplicates; this fast path does not re-check).
+
+        >>> import numpy as np
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'recip_rank'})
+        >>> buf = ev.buffer_from_arrays(np.array(['q1', 'q1']),
+        ...                             np.array(['d2', 'd1']),
+        ...                             np.array([0.2, 0.9], dtype=np.float32))
+        >>> ev.evaluate_buffer(buf)['q1']['recip_rank']
+        1.0
         """
         qids = np.asarray(qids)
         docnos = np.asarray(docnos)
@@ -313,6 +356,19 @@ class RelevanceEvaluator:
         only reorders unjudged-vs-unjudged pairs relative to trec_eval, which
         no measure observes; score ties between an OOV and a judged doc are
         the one divergence, documented here.
+
+        Shapes/dtypes: ``qids`` is a length-``nq`` sequence of qrel query
+        ids; ``counts`` (``[nq]``, int) gives retrieved docs per query;
+        ``tokens`` (``[sum(counts)]``, int) and optional ``scores`` (same
+        length, cast to float32) are flat in that query order.
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'recip_rank'})
+        >>> ev.vocab.tolist()  # token id = position; -1 = out-of-vocabulary
+        ['d1', 'd2']
+        >>> buf = ev.buffer_from_tokens(['q1'], counts=[2], tokens=[0, -1],
+        ...                             scores=[0.9, 0.2])
+        >>> ev.evaluate_buffer(buf)['q1']['recip_rank']
+        1.0
         """
         qids = [str(q) for q in qids]
         missing = [q for q in qids if q not in self._qid_index]
@@ -347,12 +403,19 @@ class RelevanceEvaluator:
         return RunBuffer(qids, gidx, qidx, col, counts, rel, judged, tiebreak,
                          scores)
 
-    def batch_from_buffer(self, buf: RunBuffer,
-                          scores=None) -> M.EvalBatch:
+    def batch_from_buffer(self, buf: RunBuffer, scores=None,
+                          q_multiple: int = 1) -> M.EvalBatch:
         """Padded ``EvalBatch`` from a buffer (numeric work only).
 
         Feed the result to ``core.measures.compute_measures_jit`` or to
         ``core.streaming.metric_update`` inside a training loop.
+
+        ``q_multiple`` is the shard-aware padding knob: the query axis is
+        padded to a multiple of it (on top of the usual power-of-two
+        bucketing), so the batch divides evenly over the query axis of a
+        device mesh.  ``repro.distributed.sharded_evaluator`` passes the mesh
+        size here; padded queries carry ``query_mask == False`` and are
+        ignored by every measure and aggregate.
         """
         if scores is not None:
             buf = buf.with_scores(scores)
@@ -362,24 +425,55 @@ class RelevanceEvaluator:
         max_d = int(buf.counts.max()) if nq else 0
         jcounts = self._judged_counts[buf.gidx]
         max_j = int(jcounts.max()) if nq else 0
+        q_pad = _bucket(nq, 1)
+        if q_multiple > 1:
+            q_pad = ((q_pad + q_multiple - 1) // q_multiple) * q_multiple
         return M.batch_from_flat(
             qidx=buf.qidx, col=buf.col, scores=buf.scores,
             tiebreak=buf.tiebreak, rel=buf.rel, judged=buf.judged,
             ideal_rows=self._ideal[buf.gidx],
             n_rel=self._n_rel[buf.gidx],
             n_judged_nonrel=self._n_nonrel[buf.gidx],
-            n_queries=nq, q_pad=_bucket(nq, 1), d_pad=_bucket(max_d),
+            n_queries=nq, q_pad=q_pad, d_pad=_bucket(max_d),
             j_pad=_bucket(max(max_j, 1)), counts=buf.counts)
 
     def evaluate_buffer(self, buf: RunBuffer,
                         scores=None) -> Dict[str, Dict[str, float]]:
-        """Evaluate a pre-tokenized buffer; optional fresh flat scores."""
+        """Evaluate a pre-tokenized buffer; optional fresh flat scores.
+
+        The zero-string-work half of the session API: all docno
+        interning/tie-breaking happened when ``buf`` was built, so this call
+        is a numeric scatter plus the jitted measure core.  ``scores``, when
+        given, replaces the buffer's scores — a flat float array in the
+        buffer's query-major document order (``buf.counts[i]`` docs for
+        ``buf.qids[i]``, concatenated).
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'recip_rank'})
+        >>> buf = ev.tokenize_run({'q1': {'d1': 1.0, 'd2': 0.5}})
+        >>> ev.evaluate_buffer(buf)['q1']['recip_rank']
+        1.0
+        >>> ev.evaluate_buffer(buf, scores=[0.1, 0.9])['q1']['recip_rank']
+        0.5
+        """
         if not len(buf):
             return {}
         batch = self.batch_from_buffer(buf, scores)
         out: Dict[str, Dict[str, float]] = {}
         self._emit(out, buf.qids, batch)
         return out
+
+    def evaluate_sharded(self, run_or_buffer, mesh=None):
+        """Evaluate across every visible device (convenience wrapper).
+
+        Builds a :class:`repro.distributed.sharded_evaluator.ShardedEvaluator`
+        over ``mesh`` (default: one 1-D mesh spanning ``jax.devices()``) and
+        evaluates ``run_or_buffer`` (a run mapping or a :class:`RunBuffer`).
+        Returns a ``ShardedResult`` with per-query results bit-identical to
+        :meth:`evaluate` plus corpus-mean aggregates.
+        """
+        from repro.distributed.sharded_evaluator import ShardedEvaluator
+
+        return ShardedEvaluator(self, mesh=mesh).evaluate(run_or_buffer)
 
     # -- densification --------------------------------------------------------
 

@@ -272,18 +272,19 @@ def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...
                  "num_rel", "num_rel_ret"):
             out.append((m, ()))
             continue
-        if "." in m:
+        fam, params = m, None
+        # Output-style "P_5" / "ndcg_cut_10" / "iprec_at_recall_0.10" —
+        # checked before the "." split so iprec keys (whose level contains a
+        # dot) round-trip through parse_measures.
+        for known in ("ndcg_cut", "map_cut", "iprec_at_recall", "P",
+                      "recall", "success"):
+            if m.startswith(known + "_"):
+                fam = known
+                params = (float(m[len(known) + 1:]),)
+                break
+        if params is None and "." in m:
             fam, _, arg = m.partition(".")
             params = tuple(float(x) for x in arg.split(","))
-        else:
-            fam, params = m, None
-            # Output-style "P_5" / "ndcg_cut_10" / "iprec_at_recall_0.10".
-            for known in ("ndcg_cut", "map_cut", "iprec_at_recall", "P",
-                          "recall", "success"):
-                if m.startswith(known + "_"):
-                    fam = known
-                    params = (float(m[len(known) + 1:]),)
-                    break
         if fam not in SUPPORTED_MEASURES:
             raise ValueError(f"unsupported measure: {m!r}")
         if params is None:

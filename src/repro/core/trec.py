@@ -50,6 +50,15 @@ def parse_run_arrays(fh: TextIO) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     materializing a dict-of-dicts.  Rows are returned as-is; duplicate
     ``(qid, docno)`` pairs are the caller's responsibility (trec_eval rejects
     them, dict parsing keeps the last).
+
+    Returns three flat, equal-length 1-D arrays: ``qids`` and ``docnos`` as
+    numpy unicode arrays (file row order preserved), ``scores`` as float32.
+
+    >>> import io
+    >>> fh = io.StringIO("q1 Q0 d2 0 0.9 tag\\nq1 Q0 d1 1 0.2 tag\\n")
+    >>> qids, docnos, scores = parse_run_arrays(fh)
+    >>> qids.tolist(), docnos.tolist(), scores.astype('f8').round(2).tolist()
+    (['q1', 'q1'], ['d2', 'd1'], [0.9, 0.2])
     """
     qids, docnos, scores = [], [], []
     for line in fh:
@@ -104,6 +113,25 @@ def load_qrel(path: str) -> Dict[str, Dict[str, int]]:
 def load_run(path: str) -> Dict[str, Dict[str, float]]:
     with open(path) as fh:
         return parse_run(fh)
+
+
+def load_run_arrays(path: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """File-path convenience wrapper around :func:`parse_run_arrays`."""
+    with open(path) as fh:
+        return parse_run_arrays(fh)
+
+
+def run_id(path: str) -> str:
+    """The run tag (6th column) of the first data line — trec_eval's runid."""
+    with open(path) as fh:
+        for line in fh:
+            parts = line.split()
+            if not parts:
+                continue
+            if len(parts) != 6:
+                raise ValueError(f"malformed run line: {line!r}")
+            return parts[5]
+    return ""
 
 
 def save_qrel(path: str, qrel) -> None:

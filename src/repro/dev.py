@@ -1,0 +1,78 @@
+"""Developer workflow helpers: ``python -m repro.dev verify``.
+
+The ``verify`` target is the one-command pre-merge check documented in
+README.md:
+
+1. the tier-1 pytest suite (fast correctness, ``-m 'not slow'`` default), and
+2. a 2-device sharded smoke test under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — the sharded
+   pipeline must stay bit-identical to the single-device evaluator on the
+   conformance fixtures.
+
+Exit status is non-zero if either step fails.  ``make verify`` wraps this.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", ".."))
+SRC = os.path.join(ROOT, "src")
+
+_SMOKE = """
+    import jax
+    from repro.core import RelevanceEvaluator, supported_measures, trec
+    from repro.distributed import ShardedEvaluator
+
+    assert len(jax.devices()) == 2, jax.devices()
+    qrel = trec.load_qrel({qrel!r})
+    run = trec.load_run({run!r})
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    want = ev.evaluate(run)
+    res = ShardedEvaluator(ev).evaluate(run)
+    for qid in want:
+        for key, val in want[qid].items():
+            assert res.per_query[qid][key] == val, (qid, key)
+    print("sharded 2-device smoke: OK "
+          f"({{len(want)}} queries x {{len(ev.measure_keys)}} measures)")
+"""
+
+
+def _env(extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if extra:
+        env.update(extra)
+    return env
+
+
+def verify() -> int:
+    print("== tier-1 pytest ==", flush=True)
+    rc = subprocess.run([sys.executable, "-m", "pytest", "-x", "-q"],
+                        cwd=ROOT, env=_env()).returncode
+    if rc != 0:
+        return rc
+    print("== sharded smoke (2 host-platform devices) ==", flush=True)
+    code = textwrap.dedent(_SMOKE.format(
+        qrel=os.path.join(ROOT, "tests", "fixtures", "conformance.qrel"),
+        run=os.path.join(ROOT, "tests", "fixtures", "conformance.run")))
+    return subprocess.run(
+        [sys.executable, "-c", code], cwd=ROOT,
+        env=_env({"XLA_FLAGS":
+                  "--xla_force_host_platform_device_count=2"})).returncode
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv == ["verify"]:
+        return verify()
+    print("usage: python -m repro.dev verify", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,4 +22,12 @@ else:  # pre-0.6 JAX: experimental API, `check_rep` instead of `check_vma`
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "ShardedEvaluator", "ShardedResult"]
+
+
+def __getattr__(name):  # lazy: sharded_evaluator imports kernels/measures
+    if name in ("ShardedEvaluator", "ShardedResult"):
+        from repro.distributed import sharded_evaluator as _se
+
+        return getattr(_se, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

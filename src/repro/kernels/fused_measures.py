@@ -40,6 +40,19 @@ COLUMNS = (
 OUT_WIDTH = 64  # lane-padded; len(COLUMNS) == 45
 
 
+def _sdiv(num, den):
+    """Guarded division, bit-identical to ``core.measures._safe_div``.
+
+    The kernel used to multiply by a precomputed reciprocal (``* inv_r``),
+    which is one multiply cheaper but rounds differently from the reference
+    engine's division (e.g. ``1.5 / 3 == 0.5`` exactly, while
+    ``1.5 * float32(1/3)`` is ``0.50000001``).  The sharded evaluation path
+    promises results bit-identical to ``RelevanceEvaluator.evaluate``, so the
+    kernel divides exactly as ``core.measures`` does.
+    """
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+
+
 def _cumsum_lanes(x):
     """Inclusive cumsum along the last axis via log2(D) shifted adds.
 
@@ -74,8 +87,6 @@ def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
     cum = _cumsum_lanes(binrel)
     prec = cum / ranks
 
-    inv_r = jnp.where(n_rel > 0, 1.0 / jnp.maximum(n_rel, 1e-30), 0.0)
-
     # -- AP (+ cutoffs) ------------------------------------------------------
     ap_cum = _cumsum_lanes(binrel * prec)
     # -- DCG (+ cutoffs), linear trec_eval gain ------------------------------
@@ -84,13 +95,13 @@ def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
     # -- bpref ---------------------------------------------------------------
     jn = judged * (1.0 - binrel)
     nr_above = _cumsum_lanes(jn) - jn
-    bpref_den = jnp.maximum(jnp.minimum(n_rel, n_nonrel), 1e-30)[:, None]
+    bpref_den = jnp.minimum(n_rel, n_nonrel)[:, None]
     bterm = jnp.where(
         nr_above > 0,
-        1.0 - jnp.minimum(nr_above, n_rel[:, None]) / bpref_den,
+        1.0 - _sdiv(jnp.minimum(nr_above, n_rel[:, None]), bpref_den),
         1.0,
     )
-    bpref_v = jnp.sum(bterm * binrel, axis=-1) * inv_r
+    bpref_v = _sdiv(jnp.sum(bterm * binrel, axis=-1), n_rel)
     # -- reciprocal rank -----------------------------------------------------
     num_rel_ret = cum[:, -1]
     any_rel = num_rel_ret > 0
@@ -99,12 +110,12 @@ def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
     # -- R-precision (dynamic per-row rank R) --------------------------------
     within_r = jnp.where(ranks <= n_rel[:, None], 1.0, 0.0)
     rel_at_r = jnp.sum(binrel * within_r, axis=-1)
-    rprec = rel_at_r * inv_r
+    rprec = _sdiv(rel_at_r, n_rel)
 
     cols = [
-        ap_cum[:, -1] * inv_r,
+        _sdiv(ap_cum[:, -1], n_rel),
         rr,
-        jnp.where(idcg_full > 0, dcg_cum[:, -1] / jnp.maximum(idcg_full, 1e-30), 0.0),
+        _sdiv(dcg_cum[:, -1], idcg_full),
         bpref_v,
         num_rel_ret,
         rprec,
@@ -112,18 +123,45 @@ def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
     for k in CUTOFFS:
         cols.append(_at(cum, k) / float(k))
     for k in CUTOFFS:
-        cols.append(_at(cum, k) * inv_r)
+        cols.append(_sdiv(_at(cum, k), n_rel))
     for j, k in enumerate(CUTOFFS):
         idcg_k = scal[:, 3 + j]
-        cols.append(jnp.where(idcg_k > 0, _at(dcg_cum, k) / jnp.maximum(idcg_k, 1e-30), 0.0))
+        cols.append(_sdiv(_at(dcg_cum, k), idcg_k))
     for k in CUTOFFS:
-        cols.append(_at(ap_cum, k) * inv_r)
+        cols.append(_sdiv(_at(ap_cum, k), n_rel))
     for k in SUCCESS_CUTOFFS:
         cols.append(jnp.where(_at(cum, k) > 0, 1.0, 0.0))
 
     out = jnp.stack(cols, axis=-1)  # [bq, 45]
     out = jnp.pad(out, ((0, 0), (0, OUT_WIDTH - out.shape[-1])))
     out_ref[...] = out
+
+
+@functools.lru_cache(maxsize=None)
+def _measure_call(q_pad: int, d: int, block_q: int, relevance_level: float,
+                  interpret: bool):
+    """Build the ``pallas_call`` for one shard geometry, memoized.
+
+    The sharded evaluation path (``repro.distributed.sharded_evaluator``)
+    invokes the kernel once per device shard; every shard has the identical
+    local ``[q_pad/n_shards, d]`` geometry, so the grid/block specs (and the
+    closure holding them) are constructed exactly once and reused across
+    shards, re-traces, and steps.  Keys are the full static signature —
+    anything that changes the lowered kernel.
+    """
+    kern = functools.partial(_kernel, relevance_level=relevance_level)
+    return pl.pallas_call(
+        kern,
+        grid=(q_pad // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, OUT_WIDTH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, OUT_WIDTH), jnp.float32),
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "relevance_level",
@@ -138,17 +176,6 @@ def fused_measures(rel_sorted, judged_sorted, scalars, block_q: int = 8,
         rel_sorted = jnp.pad(rel_sorted, pad)
         judged_sorted = jnp.pad(judged_sorted, pad)
         scalars = jnp.pad(scalars, pad)
-    kern = functools.partial(_kernel, relevance_level=relevance_level)
-    out = pl.pallas_call(
-        kern,
-        grid=(q_pad // block_q,),
-        in_specs=[
-            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
-            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
-            pl.BlockSpec((block_q, 16), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_q, OUT_WIDTH), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((q_pad, OUT_WIDTH), jnp.float32),
-        interpret=interpret,
-    )(rel_sorted, judged_sorted, scalars)
+    out = _measure_call(q_pad, d, block_q, relevance_level, interpret)(
+        rel_sorted, judged_sorted, scalars)
     return out[:q]

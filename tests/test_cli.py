@@ -1,0 +1,151 @@
+"""CLI conformance: ``python -m repro`` must speak trec_eval's dialect.
+
+The golden fixture (tests/fixtures/conformance.golden) is byte-compared
+against the CLI's output for the hand-verified conformance qrel/run pair, and
+independently re-derived from ``test_conformance._trec_eval_reference`` so
+the golden itself is anchored to the hand-written trec_eval reimplementation
+rather than to the code under test.
+"""
+
+import io
+import os
+import subprocess
+import sys
+
+import pytest
+
+from test_conformance import RANKED, _trec_eval_reference
+
+from repro import cli
+from repro.core import supported_measures
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+QREL = os.path.join(FIXTURES, "conformance.qrel")
+RUN = os.path.join(FIXTURES, "conformance.run")
+GOLDEN = os.path.join(FIXTURES, "conformance.golden")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _cli(argv):
+    buf = io.StringIO()
+    assert cli.main(argv, out=buf) == 0
+    return buf.getvalue()
+
+
+def _golden_text():
+    with open(GOLDEN, newline="") as fh:
+        return fh.read()
+
+
+def test_cli_inprocess_byte_matches_golden():
+    assert _cli([QREL, RUN]) == _golden_text()
+
+
+@pytest.mark.slow
+def test_python_dash_m_repro_byte_matches_golden():
+    """The real ``python -m repro`` entry point, end to end."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-m", "repro", QREL, RUN],
+                         capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout == _golden_text()
+
+
+def test_golden_matches_independent_reference():
+    """Every 'all' line re-derived from the hand-written trec_eval reference."""
+    per_query = {qid: _trec_eval_reference(s["rels"], s["R"], s["N"],
+                                           s["ideal"])
+                 for qid, s in RANKED.items()}
+    n_q = len(per_query)
+    want = {}
+    for key in cli.ordered_keys(sorted(supported_measures)):
+        total = sum(v[key] for v in per_query.values())
+        want[key] = total if key in cli.SUM_MEASURES else total / n_q
+    want["num_q"] = float(n_q)
+    want["runid"] = "tag"
+
+    for line in _golden_text().splitlines():
+        name, qid, val = line.split("\t")
+        name = name.rstrip()
+        assert qid == "all"
+        assert cli.format_line(name, "all", want[name]) == line, name
+
+
+def test_cli_per_query_blocks():
+    """-q prints query-major blocks (run order) and reference values."""
+    lines = _cli(["-q", QREL, RUN]).splitlines()
+    keys = cli.ordered_keys(sorted(supported_measures))
+    # q1 block, q2 block, then runid + num_q + summary
+    assert len(lines) == 2 * len(keys) + len(keys) + 2
+    q1 = lines[:len(keys)]
+    q2 = lines[len(keys):2 * len(keys)]
+    assert all(l.split("\t")[1] == "q1" for l in q1)
+    assert all(l.split("\t")[1] == "q2" for l in q2)
+    for block, qid in ((q1, "q1"), (q2, "q2")):
+        spec = RANKED[qid]
+        want = _trec_eval_reference(spec["rels"], spec["R"], spec["N"],
+                                    spec["ideal"])
+        for line in block:
+            name = line.split("\t")[0].rstrip()
+            assert cli.format_line(name, qid, want[name]) == line, (qid, name)
+
+
+def test_cli_measure_selection_and_order():
+    out = _cli(["-m", "ndcg", "-m", "map", QREL, RUN]).splitlines()
+    names = [l.split("\t")[0].rstrip() for l in out]
+    # stable print order regardless of -m order: map before ndcg
+    assert names == ["runid", "num_q", "map", "ndcg"]
+
+
+def test_cli_output_style_measure_key():
+    out = _cli(["-m", "P_5", QREL, RUN]).splitlines()
+    assert out[-1].split("\t")[0].rstrip() == "P_5"
+    assert out[-1].split("\t")[2] == "0.3000"
+
+
+def test_cli_complete_flag_averages_over_qrel_queries(tmp_path):
+    # a run that only answers q1: -c must divide by both qrel queries and
+    # count q2's relevant doc in num_rel.
+    partial = tmp_path / "partial.run"
+    partial.write_text("q1 Q0 APPLE 0 3.0 tag\n")
+    base = _cli(["-m", "map", "-m", "num_rel", str(QREL), str(partial)])
+    comp = _cli(["-c", "-m", "map", "-m", "num_rel", str(QREL), str(partial)])
+
+    def val(text, name):
+        for line in text.splitlines():
+            if line.split("\t")[0].rstrip() == name:
+                return line.split("\t")[2]
+        raise KeyError(name)
+
+    assert val(base, "num_q") == "1" and val(comp, "num_q") == "2"
+    assert float(val(comp, "map")) == pytest.approx(
+        float(val(base, "map")) / 2, abs=5e-5)
+    assert val(base, "num_rel") == "3" and val(comp, "num_rel") == "4"
+
+
+def test_cli_sharded_flag_byte_identical():
+    assert _cli(["--sharded", QREL, RUN]) == _golden_text()
+
+
+def test_cli_rejects_unknown_measure(capsys):
+    with pytest.raises(SystemExit):
+        cli.main(["-m", "nosuch", QREL, RUN])
+
+
+def test_cli_merges_repeated_family_selectors():
+    """-m P_5 -m P_10 must print BOTH cutoffs (regression: dict() collapse)."""
+    out = _cli(["-m", "P_5", "-m", "P_10", QREL, RUN]).splitlines()
+    names = [l.split("\t")[0].rstrip() for l in out]
+    assert names == ["runid", "num_q", "P_5", "P_10"]
+    assert cli.ordered_keys(["ndcg_cut_10", "ndcg_cut_5"]) == \
+        ["ndcg_cut_5", "ndcg_cut_10"]
+
+
+def test_cli_rejects_duplicate_run_rows(tmp_path, capsys):
+    """trec_eval errors on duplicate (qid, docno) rows; so must the CLI."""
+    dup = tmp_path / "dup.run"
+    dup.write_text("q1 Q0 APPLE 0 0.9 t\nq1 Q0 APPLE 1 0.8 t\n")
+    with pytest.raises(SystemExit):
+        cli.main([QREL, str(dup)])
+    assert "duplicate" in capsys.readouterr().err

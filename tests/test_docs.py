@@ -1,0 +1,53 @@
+"""Documentation must execute: every ```python block in README.md and
+docs/ARCHITECTURE.md runs as-is (blocks within one file share a namespace,
+so later snippets may build on earlier ones), and the public-API docstring
+examples run under doctest."""
+
+import doctest
+import os
+import re
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_BLOCK = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _python_blocks(path):
+    with open(os.path.join(ROOT, path)) as fh:
+        return _BLOCK.findall(fh.read())
+
+
+@pytest.mark.parametrize("path", ["README.md", "docs/ARCHITECTURE.md"])
+def test_doc_code_blocks_run(path):
+    blocks = _python_blocks(path)
+    assert blocks, f"{path} has no python blocks?"
+    ns = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"{path}:block{i}", "exec"), ns)
+        except Exception as e:  # pragma: no cover - the assertion message
+            raise AssertionError(
+                f"{path} block {i} failed: {e}\n---\n{block}") from e
+
+
+@pytest.mark.parametrize("module_name", [
+    "repro.core.evaluator",
+    "repro.core.trec",
+])
+def test_docstring_examples(module_name):
+    import importlib
+
+    module = importlib.import_module(module_name)
+    results = doctest.testmod(module, verbose=False, report=True)
+    assert results.attempted > 0, f"{module_name}: no doctests collected"
+    assert results.failed == 0, f"{module_name}: {results.failed} doctest(s) failed"
+
+
+def test_readme_documents_required_sections():
+    with open(os.path.join(ROOT, "README.md")) as fh:
+        readme = fh.read()
+    for needle in ("python -m repro", "make verify", "Module map",
+                   "tokenize_run", "ShardedEvaluator"):
+        assert needle in readme, needle

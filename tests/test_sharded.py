@@ -1,0 +1,170 @@
+"""Sharded evaluation pipeline: bit-identity with the single-device evaluator.
+
+Acceptance for the sharded path: ``ShardedEvaluator`` must produce per-query
+results **bit-identical** to ``RelevanceEvaluator.evaluate`` on the
+conformance fixtures for mesh sizes 1, 2, and 4.  Mesh size 1 runs
+in-process; 2 and 4 need ``--xla_force_host_platform_device_count`` set
+before jax initializes, hence subprocesses.  These are tier-1 tests (not
+marked slow): they guard the acceptance criterion of the sharded pipeline.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_BIT_IDENTITY_CODE = """
+    import numpy as np
+    from repro.core import RelevanceEvaluator, aggregate_results, \\
+        supported_measures, trec
+    from repro.distributed import ShardedEvaluator
+
+    qrel = trec.load_qrel({qrel!r})
+    run = trec.load_run({run!r})
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    want = ev.evaluate(run)
+    sev = ShardedEvaluator(ev)
+    assert sev.n_shards == {devices}, sev.n_shards
+    res = sev.evaluate(run)
+    assert set(res.per_query) == set(want)
+    for qid in want:
+        for key, val in want[qid].items():
+            got = res.per_query[qid][key]
+            assert got == val, (qid, key, got, val)  # bit-identical
+    agg = aggregate_results(want)
+    for key, val in agg.items():
+        np.testing.assert_allclose(res.aggregates[key], val, atol=1e-6,
+                                   err_msg=key)
+    print("BIT_IDENTICAL")
+"""
+
+
+def _fixture_paths():
+    return (os.path.join(FIXTURES, "conformance.qrel"),
+            os.path.join(FIXTURES, "conformance.run"))
+
+
+def _run_subprocess(code: str, devices: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_bit_identical_mesh1():
+    qrel_path, run_path = _fixture_paths()
+    code = _BIT_IDENTITY_CODE.format(qrel=qrel_path, run=run_path, devices=1)
+    env_devices = 1
+    # in-process: the tier-1 session runs on exactly one device (conftest)
+    ns = {}
+    exec(textwrap.dedent(code), ns)  # raises on mismatch
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_bit_identical_multi_device(devices):
+    qrel_path, run_path = _fixture_paths()
+    out = _run_subprocess(
+        _BIT_IDENTITY_CODE.format(qrel=qrel_path, run=run_path,
+                                  devices=devices), devices)
+    assert "BIT_IDENTICAL" in out
+
+
+_MESH_INVARIANCE_CODE = """
+    import json
+    from repro.core import RelevanceEvaluator, supported_measures
+    from repro.data.synthetic_ir import synthesize_run
+    from repro.distributed import ShardedEvaluator
+
+    run, qrel = synthesize_run(12, 30)
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    res = ShardedEvaluator(ev).evaluate(run)
+    print(json.dumps(res.per_query, sort_keys=True))
+"""
+
+
+def test_sharded_results_invariant_across_mesh_sizes():
+    """Measures are row-independent: sharding must not change ANY bit, even
+    on synthetic float data where the kernel and the reference engine may
+    legitimately differ by an ulp."""
+    out2 = _run_subprocess(_MESH_INVARIANCE_CODE, devices=2)
+    out4 = _run_subprocess(_MESH_INVARIANCE_CODE, devices=4)
+    assert out2 == out4
+    import json
+
+    per_query = json.loads(out2)
+    assert len(per_query) == 12
+
+    # and vs the reference engine: exact for reference-computed measures,
+    # <= ~1 ulp for fused-kernel columns (float association, documented)
+    from repro.core import RelevanceEvaluator, supported_measures
+    from repro.data.synthetic_ir import synthesize_run
+
+    run, qrel = synthesize_run(12, 30)
+    want = RelevanceEvaluator(qrel, supported_measures).evaluate(run)
+    for qid in want:
+        for key, val in want[qid].items():
+            assert per_query[qid][key] == pytest.approx(val, abs=1e-6), \
+                (qid, key)
+
+
+def test_sharded_buffer_rescore_matches_evaluate_buffer():
+    """Session fast path under sharding: fresh scores, zero string work."""
+    from repro.core import RelevanceEvaluator, supported_measures, trec
+    from repro.distributed import ShardedEvaluator
+
+    qrel_path, run_path = _fixture_paths()
+    ev = RelevanceEvaluator(trec.load_qrel(qrel_path), supported_measures)
+    buf = ev.buffer_from_arrays(*trec.load_run_arrays(run_path))
+    sev = ShardedEvaluator(ev)
+    fresh = np.linspace(1.0, 0.1, buf.qidx.shape[0]).astype(np.float32)
+    want = ev.evaluate_buffer(buf, scores=fresh)
+    got = sev.evaluate_buffer(buf, scores=fresh).per_query
+    for qid in want:
+        for key, val in want[qid].items():
+            assert got[qid][key] == val, (qid, key)
+
+
+def test_sharded_from_files_and_uneven_padding():
+    """from_files ingest + a query count that does not divide the mesh."""
+    from repro.distributed import ShardedEvaluator
+
+    qrel_path, run_path = _fixture_paths()
+    sev, buf = ShardedEvaluator.from_files(qrel_path, run_path,
+                                           measures=("map", "ndcg"))
+    res = sev.evaluate_buffer(buf)
+    want = sev.evaluator.evaluate_buffer(buf)
+    assert set(res.per_query) == set(want)
+    for qid in want:
+        for key, val in want[qid].items():
+            assert res.per_query[qid][key] == val
+    # aggregates equal the mean over real queries only (padding masked out)
+    for key in ("map", "ndcg"):
+        vals = [want[q][key] for q in want]
+        np.testing.assert_allclose(res.aggregates[key], np.mean(vals),
+                                   atol=1e-6)
+
+
+def test_sharded_empty_run():
+    from repro.core import RelevanceEvaluator
+    from repro.distributed import ShardedEvaluator
+
+    ev = RelevanceEvaluator({"q1": {"d1": 1}}, ("map",))
+    res = ShardedEvaluator(ev).evaluate({})
+    assert res.per_query == {} and res.aggregates == {}
+
+
+def test_evaluator_convenience_method():
+    from repro.core import RelevanceEvaluator
+
+    ev = RelevanceEvaluator({"q1": {"d1": 1, "d2": 0}}, ("map",))
+    res = ev.evaluate_sharded({"q1": {"d1": 0.2, "d2": 0.9}})
+    assert res.per_query["q1"]["map"] == 0.5
