@@ -1,0 +1,113 @@
+"""Serve segment: sustained throughput/latency of the evaluation service.
+
+Protocol: one collection (paper §3 synthetic protocol) is registered and its
+run pinned via ``register_run``; then, at each concurrency level C, C client
+coroutines issue score-only re-scoring requests back to back for a fixed
+request budget.  This measures the serving hot path end to end — request
+validation → ``with_scores`` → micro-batch coalescing → ONE
+``evaluate_buffers`` backend call per window → per-request result fan-out —
+the same work a training loop or A/B harness generates against a resident
+service.
+
+Reported per level: sustained ``runs_per_s`` (completed requests / wall),
+mean per-request latency, and the coalescing factor (requests per backend
+call).  Higher concurrency should raise throughput (bigger coalesced
+batches amortize dispatch) until the batch cost itself dominates.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Dict, List
+
+import numpy as np
+
+#: concurrency levels (the acceptance bar is >= 2 levels)
+LEVELS = (1, 4, 16)
+LEVELS_FULL = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _drive(n_queries: int, n_docs: int, requests: int,
+           concurrency: int, window: float) -> Dict:
+    from repro.core import RelevanceEvaluator
+    from repro.data.synthetic_ir import synthesize_run
+    from repro.serve import EvaluationService
+
+    run, qrel = synthesize_run(n_queries, n_docs)
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg", "recip_rank"))
+    n_scores = int(ev.tokenize_run(run).qidx.shape[0])
+    rng = np.random.default_rng(0)
+    # pre-generate score sets so the clients measure serving, not RNG
+    score_sets = [rng.normal(size=n_scores).astype(np.float32)
+                  for _ in range(min(requests, 32))]
+
+    async def bench() -> Dict:
+        svc = EvaluationService(window=window, max_batch=max(concurrency, 1),
+                                backend="single")
+        svc.register_qrel("bench", qrel, ("map", "ndcg", "recip_rank"))
+        svc.register_run("bench", "r", run=run)
+        # Warmup: compile the measure core at every padded geometry this
+        # level can produce.  Coalesced batches of k requests pad the query
+        # axis to a power-of-two bucket, so warming each power-of-two wave
+        # size up to `concurrency` covers every steady-state shape — the
+        # timed section then measures serving, not XLA compilation.
+        wave = 1
+        while True:
+            await asyncio.gather(*(
+                svc.evaluate("bench", run_ref="r",
+                             scores=score_sets[i % len(score_sets)])
+                for i in range(wave)))
+            if wave >= concurrency:
+                break
+            wave = min(wave * 2, concurrency)
+        # snapshot AFTER warmup so the reported coalescing factor covers
+        # only the timed section (warmup waves are small on purpose and
+        # would otherwise understate requests-per-backend-call)
+        warmup_calls = svc.stats()["backend_calls"]
+
+        done = 0
+        latencies: List[float] = []
+
+        async def client(i: int) -> None:
+            nonlocal done
+            k = i
+            while done < requests:
+                t0 = time.perf_counter()
+                await svc.evaluate("bench", run_ref="r",
+                                   scores=score_sets[k % len(score_sets)])
+                latencies.append(time.perf_counter() - t0)
+                done += 1
+                k += concurrency
+
+        t0 = time.perf_counter()
+        await asyncio.gather(*(client(i) for i in range(concurrency)))
+        wall = time.perf_counter() - t0
+        timed_calls = svc.stats()["backend_calls"] - warmup_calls
+        return {
+            "concurrency": concurrency,
+            "requests": len(latencies),
+            "runs_per_s": len(latencies) / wall,
+            "mean_latency_ms": 1e3 * float(np.mean(latencies)),
+            "p90_latency_ms": 1e3 * float(np.quantile(latencies, 0.9)),
+            "backend_calls": timed_calls,
+            "coalesce_factor": len(latencies) / max(timed_calls, 1),
+        }
+
+    return asyncio.run(bench())
+
+
+def run(full: bool = False) -> List[Dict]:
+    n_queries, n_docs = (512, 256) if full else (128, 64)
+    requests = 256 if full else 48
+    window = 0.002
+    rows: List[Dict] = []
+    for concurrency in (LEVELS_FULL if full else LEVELS):
+        row = _drive(n_queries, n_docs, requests, concurrency, window)
+        row.update(n_queries=n_queries, n_docs=n_docs, window_s=window)
+        rows.append(row)
+        print(f"serve c={row['concurrency']}: "
+              f"{row['runs_per_s']:.1f} runs/s, "
+              f"mean latency {row['mean_latency_ms']:.1f}ms, "
+              f"{row['coalesce_factor']:.1f} req/backend-call")
+    return rows

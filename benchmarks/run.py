@@ -12,6 +12,9 @@ Segments (repeat ``--only`` to pick several):
 * ``sharded``   — multi-device scaling of the sharded evaluation pipeline
   (``repro.distributed.sharded_evaluator``) over 1/2/4/8 host-platform
   devices; subprocess-per-device-count, see ``bench_sharded``.
+* ``serve``     — sustained throughput/latency of the async evaluation
+  service (``repro.serve``) at several client-concurrency levels, including
+  the request-coalescing factor; see ``bench_serve``.
 * ``qlearning`` — the paper's RL demo, episodes/s.
 * ``batched``   — dense batched evaluation vs the dict API.
 
@@ -31,22 +34,24 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (20 reps, 10k queries)")
     ap.add_argument("--only", action="append", default=None,
-                    choices=("rq1", "rq2", "densify", "sharded", "qlearning",
-                             "batched"),
+                    choices=("rq1", "rq2", "densify", "sharded", "serve",
+                             "qlearning", "batched"),
                     help="segment to run (repeatable; default: all): "
                          "rq1/rq2 = paper figures, densify = run->EvalBatch "
                          "conversion paths, sharded = multi-device scaling, "
+                         "serve = async service throughput/latency, "
                          "qlearning = RL demo, batched = dense batched eval")
     args = ap.parse_args(argv)
 
     from benchmarks import bench_batched, bench_qlearning, bench_rq1, \
-        bench_rq2, bench_sharded
+        bench_rq2, bench_serve, bench_sharded
 
     suites = {
         "rq1": bench_rq1.run,
         "rq2": bench_rq2.run,
         "densify": bench_rq1.densify,
         "sharded": bench_sharded.run,
+        "serve": bench_serve.run,
         "qlearning": bench_qlearning.run,
         "batched": bench_batched.run,
     }
@@ -78,6 +83,10 @@ def main(argv=None) -> None:
         sp_str = f"{sp:.2f}" if sp is not None else "nan"
         print(f"sharded_dev{row['devices']},{row['sharded_us']:.1f},"
               f"speedup={sp_str}")
+    for row in results.get("serve", []):
+        print(f"serve_c{row['concurrency']},"
+              f"{1e6 / row['runs_per_s']:.1f},"
+              f"runs_per_s={row['runs_per_s']:.1f}")
     for row in results.get("qlearning", []):
         print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
               f"tail_reward={row['tail_avg_reward']:+.4f}")

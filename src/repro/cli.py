@@ -15,6 +15,8 @@ Flags mirror trec_eval:
 * ``-m MEASURE`` — repeatable measure selector: a family (``map``,
   ``ndcg_cut``), a parameterized family (``P.5,10``), an output-style key
   (``ndcg_cut_10``), or ``all`` (every supported measure, the default).
+  Aggregate-only measures (``gm_map``, the geometric-mean MAP) print a
+  summary line only — never per-query lines — exactly like trec_eval.
 * ``--sharded`` — run the multi-device pipeline
   (``repro.distributed.sharded_evaluator``) instead of the single-device
   evaluator; results are bit-identical, so output does not change.
@@ -40,7 +42,7 @@ from repro.core import (RelevanceEvaluator, measures as M, supported_measures,
 #: summary/per-query print order (trec_eval prints its registry order; ours
 #: is fixed here so output is stable under any -m combination)
 FAMILY_ORDER = (
-    "num_ret", "num_rel", "num_rel_ret", "map", "Rprec", "bpref",
+    "num_ret", "num_rel", "num_rel_ret", "map", "gm_map", "Rprec", "bpref",
     "recip_rank", "iprec_at_recall", "P", "recall", "ndcg", "ndcg_cut",
     "map_cut", "success",
 )
@@ -50,6 +52,10 @@ INT_MEASURES = frozenset({"num_q", "num_ret", "num_rel", "num_rel_ret"})
 
 #: measures summarized by summation rather than the mean over queries
 SUM_MEASURES = frozenset({"num_ret", "num_rel", "num_rel_ret"})
+
+#: aggregate-only measures: suppressed from per-query (-q) blocks, and their
+#: summary is exp(mean(log contributions)) — trec_eval's geometric mean
+AGGREGATE_ONLY = M.AGGREGATE_ONLY_MEASURES
 
 
 def ordered_keys(measures: Sequence[str]) -> List[str]:
@@ -62,15 +68,8 @@ def ordered_keys(measures: Sequence[str]) -> List[str]:
         parsed[fam] = tuple(sorted(set(parsed.get(fam, ()) + params)))
     keys: List[str] = []
     for fam in FAMILY_ORDER:
-        if fam not in parsed:
-            continue
-        params = parsed[fam]
-        if not params:
-            keys.append(fam)
-        elif fam == "iprec_at_recall":
-            keys.extend(f"{fam}_{p:.2f}" for p in params)
-        else:
-            keys.extend(f"{fam}_{int(p)}" for p in params)
+        if fam in parsed:
+            keys.extend(M.family_keys(fam, parsed[fam]))
     return keys
 
 
@@ -96,14 +95,45 @@ def _summarize(results: Dict[str, Dict[str, float]], keys: Sequence[str],
     n_q = len(qrel) if complete else len(results)
     summary: Dict[str, float] = {"num_q": float(n_q)}
     denom = float(max(n_q, 1))
+    n_missing = n_q - len(results)
     for k in keys:
         total = sum(res[k] for res in results.values())
         if k == "num_rel" and complete:
             total += sum(
                 float(sum(r >= relevance_level for r in docs.values()))
                 for qid, docs in qrel.items() if qid not in results)
+        if k in AGGREGATE_ONLY:
+            # missing queries under -c have AP 0, clipped to GM_MIN
+            total += np.log(M.GM_MIN) * n_missing
         summary[k] = total if k in SUM_MEASURES else total / denom
-    return summary
+    out = M.finalize_aggregates(summary)
+    if n_q == 0:  # no queries: report 0, not exp(empty mean) = 1
+        for k in AGGREGATE_ONLY & set(out):
+            out[k] = 0.0
+    return out
+
+
+def add_measure_args(ap: argparse.ArgumentParser) -> None:
+    """The measure-selection flags shared by ``repro`` and ``repro.serve``.
+
+    ``-l`` (relevance level) and repeatable ``-m`` (measure selector) mean
+    the same thing to the one-shot CLI and to the evaluation service's
+    default-collection registration.
+    """
+    ap.add_argument("-l", dest="level", type=int, default=1, metavar="N",
+                    help="relevance level: judgment >= N is relevant "
+                         "(default 1)")
+    ap.add_argument("-m", dest="measures", action="append", metavar="MEASURE",
+                    help="measure family/key (repeatable; default: all "
+                         "supported measures)")
+
+
+def resolve_measures(selected: Optional[Sequence[str]]) -> List[str]:
+    """Expand the ``-m`` selections (``None``/``all`` → every family)."""
+    selected = list(selected or ["all"])
+    if "all" in selected:
+        return sorted(supported_measures)
+    return selected
 
 
 def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
@@ -118,20 +148,13 @@ def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
     ap.add_argument("-c", dest="complete", action="store_true",
                     help="average over all qrel queries (missing queries "
                          "count as 0)")
-    ap.add_argument("-l", dest="level", type=int, default=1, metavar="N",
-                    help="relevance level: judgment >= N is relevant "
-                         "(default 1)")
-    ap.add_argument("-m", dest="measures", action="append", metavar="MEASURE",
-                    help="measure family/key (repeatable; default: all "
-                         "supported measures)")
+    add_measure_args(ap)
     ap.add_argument("--sharded", action="store_true",
                     help="evaluate with the multi-device sharded pipeline")
     args = ap.parse_args(argv)
     out = out or sys.stdout
 
-    selected = args.measures or ["all"]
-    if "all" in selected:
-        selected = sorted(supported_measures)
+    selected = resolve_measures(args.measures)
     try:
         keys = ordered_keys(selected)
     except ValueError as e:
@@ -159,11 +182,14 @@ def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
     lines: List[str] = []
     if args.per_query:
         # Query-major blocks, queries in run-file first-appearance order.
+        # Aggregate-only measures (gm_map) have no per-query line, like
+        # trec_eval.
+        pq_keys = [k for k in keys if k not in AGGREGATE_ONLY]
         for qid in dict.fromkeys(qids_arr.tolist()):
             if qid not in results:
                 continue
             lines.extend(
-                format_line(k, qid, results[qid][k]) for k in keys)
+                format_line(k, qid, results[qid][k]) for k in pq_keys)
     summary = _summarize(results, keys, qrel, args.complete, args.level)
     lines.append(format_line("runid", "all", runid))
     lines.append(format_line("num_q", "all", summary["num_q"]))

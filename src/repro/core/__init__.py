@@ -7,15 +7,19 @@ Public API mirrors pytrec_eval:
 * ``measures`` / ``streaming`` — batched + in-loop device entry points.
 """
 
-from repro.core.evaluator import RelevanceEvaluator, RunBuffer, aggregate_results
+from repro.core.evaluator import (RelevanceEvaluator, RunBuffer,
+                                  aggregate_results, concat_run_buffers)
 from repro.core.measures import (
+    AGGREGATE_ONLY_MEASURES,
     DEFAULT_CUTOFFS,
+    GM_MIN,
     SUPPORTED_MEASURES as supported_measures,
     EvalBatch,
     batch_from_dense,
     batch_from_flat,
     compute_measures,
     compute_measures_jit,
+    finalize_aggregates,
     measure_keys,
     parse_measures,
 )
@@ -25,13 +29,17 @@ __all__ = [
     "RelevanceEvaluator",
     "RunBuffer",
     "aggregate_results",
+    "concat_run_buffers",
     "batch_from_flat",
     "supported_measures",
+    "AGGREGATE_ONLY_MEASURES",
     "DEFAULT_CUTOFFS",
+    "GM_MIN",
     "EvalBatch",
     "batch_from_dense",
     "compute_measures",
     "compute_measures_jit",
+    "finalize_aggregates",
     "measure_keys",
     "parse_measures",
     "streaming",

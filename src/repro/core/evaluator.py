@@ -47,13 +47,17 @@ Session API (persistent, string-free re-evaluation):
   vocabulary once.  :meth:`RelevanceEvaluator.evaluate_buffer` (optionally
   with fresh scores) then skips all string work, and
   :meth:`RelevanceEvaluator.batch_from_buffer` yields an ``EvalBatch`` for
-  ``core.streaming``'s in-training-loop accumulators.
+  ``core.streaming``'s in-training-loop accumulators;
+* :meth:`RelevanceEvaluator.evaluate_buffers` evaluates SEVERAL buffers
+  with one coalesced backend call (:func:`concat_run_buffers` stacks them
+  on the query axis) — the serving primitive behind :mod:`repro.serve`.
 """
 
 from __future__ import annotations
 
+import threading
 from itertools import chain, repeat
-from typing import Dict, Iterable, List, Mapping, Sequence, Union
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
@@ -115,8 +119,53 @@ class RunBuffer:
                          scores)
 
 
+def concat_run_buffers(bufs: Sequence[RunBuffer]) -> RunBuffer:
+    """Stack several :class:`RunBuffer`\\ s (same evaluator) into one.
+
+    The micro-batching primitive of the serve layer: N pending requests for
+    the same collection become ONE buffer whose query axis is the requests
+    laid end to end, so a single ``batch_from_buffer`` + measure-core call
+    evaluates them all.  Queries are kept per-request (the same qid may
+    appear in several buffers without collision); split results back by the
+    per-buffer query counts (``len(b)``).
+
+    Every buffer must carry scores (re-score first via
+    :meth:`RunBuffer.with_scores` if needed).  Buffers must come from the
+    same evaluator — ``gidx``/``rel``/``judged`` refer to its interned qrel
+    state, and nothing here can re-check that.
+    """
+    if not bufs:
+        raise ValueError("no buffers to concatenate")
+    if any(b.scores is None for b in bufs):
+        raise ValueError("every buffer needs scores; use with_scores()")
+    if len(bufs) == 1:
+        return bufs[0]
+    qids: List[str] = []
+    for b in bufs:
+        qids.extend(b.qids)
+    q_off = np.cumsum([0] + [len(b) for b in bufs[:-1]])
+    return RunBuffer(
+        qids,
+        np.concatenate([b.gidx for b in bufs]),
+        np.concatenate([b.qidx + off for b, off in zip(bufs, q_off)]),
+        np.concatenate([b.col for b in bufs]),
+        np.concatenate([b.counts for b in bufs]),
+        np.concatenate([b.rel for b in bufs]),
+        np.concatenate([b.judged for b in bufs]),
+        np.concatenate([b.tiebreak for b in bufs]),
+        np.concatenate([b.scores for b in bufs]),
+    )
+
+
 class RelevanceEvaluator:
-    """Evaluate rankings against relevance judgments, trec_eval semantics."""
+    """Evaluate rankings against relevance judgments, trec_eval semantics.
+
+    Thread-safety: after construction the evaluator's interned qrel state is
+    immutable, so any number of threads may call ``evaluate`` /
+    ``evaluate_buffer`` / ``evaluate_buffers`` concurrently (the serve layer
+    relies on this to run backend calls on executor threads).  The one lazy
+    mutation — the seed reference-densifier state — is built under a lock.
+    """
 
     def __init__(
         self,
@@ -148,6 +197,7 @@ class RelevanceEvaluator:
             self._qrel = dict(query_relevance)
         self._build_interned()
         self._reference_state_built = False
+        self._reference_lock = threading.Lock()
 
     #: queries per device batch: bounds padding waste and lets consecutive
     #: chunks reuse one compiled executable (pytrec_eval's C loop analogue)
@@ -462,6 +512,59 @@ class RelevanceEvaluator:
         self._emit(out, buf.qids, batch)
         return out
 
+    def evaluate_buffers(
+        self,
+        bufs: Sequence[RunBuffer],
+        scores_list: Optional[Sequence] = None,
+    ) -> List[Dict[str, Dict[str, float]]]:
+        """Evaluate several buffers with ONE densify + measure-core call.
+
+        The coalescing hook for the serve layer
+        (:mod:`repro.serve`): the buffers are stacked end to end on the query
+        axis (:func:`concat_run_buffers`), scattered into one padded
+        ``EvalBatch``, and dispatched to the jitted measure core once; the
+        per-query columns are then split back by each buffer's query count.
+        Results are bit-identical to calling :meth:`evaluate_buffer` once per
+        buffer — measures are computed row-independently, so stacking the
+        query axis (like sharding it) cannot change any value.
+
+        ``scores_list``, when given, pairs each buffer with fresh flat scores
+        (``None`` entries keep the buffer's own scores).
+
+        >>> ev = RelevanceEvaluator({'q1': {'d1': 1, 'd2': 0}}, {'map'})
+        >>> a = ev.tokenize_run({'q1': {'d1': 1.0, 'd2': 0.5}})
+        >>> b = ev.tokenize_run({'q1': {'d1': 0.1, 'd2': 0.9}})
+        >>> [r['q1']['map'] for r in ev.evaluate_buffers([a, b])]
+        [1.0, 0.5]
+        """
+        bufs = list(bufs)
+        if scores_list is not None:
+            if len(scores_list) != len(bufs):
+                raise ValueError(
+                    f"{len(scores_list)} score sets for {len(bufs)} buffers")
+            bufs = [b if s is None else b.with_scores(s)
+                    for b, s in zip(bufs, scores_list)]
+        if not bufs:
+            return []
+        nonempty = [b for b in bufs if len(b)]
+        if not nonempty:
+            return [{} for _ in bufs]
+        big = concat_run_buffers(nonempty)
+        batch = self.batch_from_buffer(big)
+        per_query = M.compute_measures_jit(batch, self.measures,
+                                           self.relevance_level)
+        cols = {k: np.asarray(per_query[k])[:len(big.qids)].tolist()
+                for k in self.measure_keys}
+        results: List[Dict[str, Dict[str, float]]] = []
+        lo = 0
+        for buf in bufs:
+            out: Dict[str, Dict[str, float]] = {}
+            for i, qid in enumerate(buf.qids):
+                out[qid] = {k: cols[k][lo + i] for k in self.measure_keys}
+            lo += len(buf.qids)
+            results.append(out)
+        return results
+
     def evaluate_sharded(self, run_or_buffer, mesh=None):
         """Evaluate across every visible device (convenience wrapper).
 
@@ -618,20 +721,25 @@ class RelevanceEvaluator:
     def _ensure_reference_state(self) -> None:
         if self._reference_state_built:
             return
-        self._qstats = {}
-        self._qrel_sorted = {}
-        for qid, docs in self._qrel.items():
-            rels = np.array(sorted(docs.values(), reverse=True),
-                            dtype=np.float32)
-            n_rel = float((rels >= self.relevance_level).sum())
-            n_nonrel = float(len(rels)) - n_rel
-            self._qstats[qid] = (rels, n_rel, n_nonrel)
-            docnos = np.array(list(docs.keys()))
-            vals = np.fromiter(docs.values(), dtype=np.float32,
-                               count=len(docs))
-            order = np.argsort(docnos)
-            self._qrel_sorted[qid] = (docnos[order], vals[order])
-        self._reference_state_built = True
+        with self._reference_lock:
+            if self._reference_state_built:
+                return
+            qstats = {}
+            qrel_sorted = {}
+            for qid, docs in self._qrel.items():
+                rels = np.array(sorted(docs.values(), reverse=True),
+                                dtype=np.float32)
+                n_rel = float((rels >= self.relevance_level).sum())
+                n_nonrel = float(len(rels)) - n_rel
+                qstats[qid] = (rels, n_rel, n_nonrel)
+                docnos = np.array(list(docs.keys()))
+                vals = np.fromiter(docs.values(), dtype=np.float32,
+                                   count=len(docs))
+                order = np.argsort(docnos)
+                qrel_sorted[qid] = (docnos[order], vals[order])
+            self._qstats = qstats
+            self._qrel_sorted = qrel_sorted
+            self._reference_state_built = True
 
     def _densify_reference(self, run: RunType, qids: Sequence[str]):
         """The seed per-query-loop densifier (unchanged semantics)."""
@@ -696,10 +804,21 @@ class RelevanceEvaluator:
 
 
 def aggregate_results(results: Dict[str, Dict[str, float]]) -> Dict[str, float]:
-    """Mean of every measure over queries (trec_eval's 'all' summary row)."""
+    """Mean of every measure over queries (trec_eval's 'all' summary row).
+
+    Geometric-mean measures (``gm_map``) carry per-query *log* contributions
+    and are exponentiated after averaging (``measures.finalize_aggregates``),
+    matching trec_eval's summary semantics.
+
+    >>> res = {'q1': {'map': 1.0, 'gm_map': 0.0},
+    ...        'q2': {'map': 0.25, 'gm_map': float(np.log(0.25))}}
+    >>> agg = aggregate_results(res)
+    >>> agg['map'], round(agg['gm_map'], 6)  # arithmetic vs geometric mean
+    (0.625, 0.5)
+    """
     if not results:
         return {}
     keys = next(iter(results.values())).keys()
-    return {
+    return M.finalize_aggregates({
         k: float(np.mean([results[q][k] for q in results])) for k in keys
-    }
+    })

@@ -39,10 +39,15 @@ DEFAULT_CUTOFFS: Tuple[int, ...] = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
 SUCCESS_CUTOFFS: Tuple[int, ...] = (1, 5, 10)
 IPREC_LEVELS: Tuple[float, ...] = tuple(round(0.1 * i, 1) for i in range(11))
 
+#: trec_eval's MIN_GEO_MEAN: per-query AP is clipped to this before the log
+#: so queries with AP == 0 do not collapse the geometric mean to 0.
+GM_MIN: float = 1e-5
+
 #: Measure families understood by this module (pytrec_eval-compatible ids).
 SUPPORTED_MEASURES = frozenset(
     {
         "map",
+        "gm_map",
         "ndcg",
         "recip_rank",
         "Rprec",
@@ -58,6 +63,13 @@ SUPPORTED_MEASURES = frozenset(
         "num_rel_ret",
     }
 )
+
+#: Aggregate-only measures: the per-query column is a *log contribution*
+#: (``log(max(AP, GM_MIN))`` for ``gm_map``, exactly what trec_eval
+#: accumulates per query); the user-facing value is the geometric mean
+#: ``exp(mean(column))`` produced by :func:`finalize_aggregates`.  The CLI
+#: suppresses these keys from per-query (-q) output, like trec_eval does.
+AGGREGATE_ONLY_MEASURES = frozenset({"gm_map"})
 
 
 class EvalBatch(NamedTuple):
@@ -155,6 +167,16 @@ def average_precision(s: SortedBatch) -> jax.Array:
     prec = s.cum_rel / _ranks(d)
     ap = jnp.sum(s.binrel * prec, axis=-1)
     return _safe_div(ap, s.n_rel)
+
+
+def gm_map_contrib(s: SortedBatch) -> jax.Array:
+    """Per-query geometric-MAP contribution: ``log(max(AP, GM_MIN))``.
+
+    trec_eval's ``gm_map`` accumulates exactly this per query and prints only
+    the summary ``exp(sum / num_q)``; the clip keeps zero-AP queries from
+    sending the geometric mean to 0.
+    """
+    return jnp.log(jnp.maximum(average_precision(s), GM_MIN))
 
 
 def map_cut(s: SortedBatch, k: int) -> jax.Array:
@@ -268,8 +290,8 @@ def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...
     """
     out = []
     for m in sorted(set(measures)):
-        if m in ("map", "ndcg", "recip_rank", "Rprec", "bpref", "num_ret",
-                 "num_rel", "num_rel_ret"):
+        if m in ("map", "gm_map", "ndcg", "recip_rank", "Rprec", "bpref",
+                 "num_ret", "num_rel", "num_rel_ret"):
             out.append((m, ()))
             continue
         fam, params = m, None
@@ -298,16 +320,25 @@ def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...
     return tuple(sorted(out))
 
 
+def family_keys(fam: str, params: Tuple[float, ...]) -> Tuple[str, ...]:
+    """Output keys for one parsed (family, params) entry.
+
+    Owns the pytrec_eval key-format rules (``iprec_at_recall`` levels print
+    with two decimals, cutoffs as integers) for every consumer — the
+    evaluator via :func:`measure_keys` and the CLI's print ordering.
+    """
+    if not params:
+        return (fam,)
+    if fam == "iprec_at_recall":
+        return tuple(f"{fam}_{p:.2f}" for p in params)
+    return tuple(f"{fam}_{int(p)}" for p in params)
+
+
 def measure_keys(measures: Sequence[str]) -> Tuple[str, ...]:
     """The pytrec_eval-style output keys produced for a measure set."""
     keys = []
     for fam, params in parse_measures(measures):
-        if not params:
-            keys.append(fam)
-        elif fam == "iprec_at_recall":
-            keys.extend(f"{fam}_{p:.2f}" for p in params)
-        else:
-            keys.extend(f"{fam}_{int(p)}" for p in params)
+        keys.extend(family_keys(fam, params))
     return tuple(keys)
 
 
@@ -327,6 +358,8 @@ def compute_measures(
     for fam, params in measures:
         if fam == "map":
             out["map"] = average_precision(s)
+        elif fam == "gm_map":
+            out["gm_map"] = gm_map_contrib(s)
         elif fam == "ndcg":
             out["ndcg"] = ndcg(s)
         elif fam == "recip_rank":
@@ -375,6 +408,17 @@ def aggregate(per_query: Dict[str, jax.Array], query_mask: jax.Array) -> Dict[st
     """Mean over real queries (trec_eval 'all' row)."""
     n = jnp.maximum(jnp.sum(query_mask.astype(jnp.float32)), 1.0)
     return {k: jnp.sum(v * query_mask, axis=-1) / n for k, v in per_query.items()}
+
+
+def finalize_aggregates(aggs: Dict[str, float]) -> Dict[str, float]:
+    """Turn averaged per-query columns into user-facing summary values.
+
+    Arithmetic-mean measures pass through unchanged; aggregate-only
+    geometric measures (``gm_map``) arrive as the mean of per-query log
+    contributions and leave as ``exp(mean)`` — trec_eval's geometric mean.
+    """
+    return {k: float(np.exp(v)) if k in AGGREGATE_ONLY_MEASURES else v
+            for k, v in aggs.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -3,13 +3,18 @@
 The ``verify`` target is the one-command pre-merge check documented in
 README.md:
 
-1. the tier-1 pytest suite (fast correctness, ``-m 'not slow'`` default), and
+1. the tier-1 pytest suite (fast correctness, ``-m 'not slow'`` default),
 2. a 2-device sharded smoke test under
    ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — the sharded
    pipeline must stay bit-identical to the single-device evaluator on the
-   conformance fixtures.
+   conformance fixtures, and
+3. the serve smoke test (also ``python -m repro.dev serve-smoke`` /
+   ``make serve-smoke``): boot a TCP evaluation service, fire concurrent
+   requests from several connections, and assert they were coalesced into
+   fewer backend calls with per-query results bit-identical to direct
+   evaluation.
 
-Exit status is non-zero if either step fails.  ``make verify`` wraps this.
+Exit status is non-zero if any step fails.  ``make verify`` wraps this.
 """
 
 from __future__ import annotations
@@ -42,12 +47,69 @@ _SMOKE = """
 """
 
 
+_SERVE_SMOKE = """
+    import asyncio, json
+    from repro.core import RelevanceEvaluator, trec
+    from repro.serve import EvaluationService, serve_tcp
+
+    qrel = trec.load_qrel({qrel!r})
+    run = trec.load_run({run!r})
+    measures = ("map", "ndcg", "recip_rank")
+    n = 6
+    runs = [{{q: {{d: s + 0.25 * i for d, s in docs.items()}}
+             for q, docs in run.items()}} for i in range(n)]
+    want = [RelevanceEvaluator(qrel, measures).evaluate(r) for r in runs]
+
+    async def client(port, i):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        req = {{"op": "evaluate", "id": i, "qrel_id": "smoke",
+                "run": runs[i]}}
+        writer.write((json.dumps(req) + "\\n").encode())
+        await writer.drain()
+        reply = json.loads(await reader.readline())
+        writer.close(); await writer.wait_closed()
+        assert reply["ok"], reply
+        return reply["result"]["per_query"]
+
+    async def main():
+        svc = EvaluationService(window=0.05)
+        svc.register_qrel("smoke", qrel, measures)
+        server = await serve_tcp(svc, "127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+        got = await asyncio.gather(*(client(port, i) for i in range(n)))
+        server.close(); await server.wait_closed()
+        stats = svc.stats()
+        assert stats["backend_calls"] < n, stats  # coalesced
+        for g, w in zip(got, want):
+            for qid in w:
+                for key, val in w[qid].items():
+                    assert g[qid][key] == val, (qid, key)  # bit-identical
+        print(f"serve smoke: OK ({{n}} concurrent requests -> "
+              f"{{stats['backend_calls']}} backend call(s), bit-identical)")
+
+    asyncio.run(main())
+"""
+
+
 def _env(extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     if extra:
         env.update(extra)
     return env
+
+
+def _fixture(name: str) -> str:
+    return os.path.join(ROOT, "tests", "fixtures", name)
+
+
+def serve_smoke() -> int:
+    """Boot a TCP service, assert coalescing + bit-identity (step 3)."""
+    print("== serve smoke (TCP, concurrent clients) ==", flush=True)
+    code = textwrap.dedent(_SERVE_SMOKE.format(
+        qrel=_fixture("conformance.qrel"), run=_fixture("conformance.run")))
+    return subprocess.run([sys.executable, "-c", code], cwd=ROOT,
+                          env=_env()).returncode
 
 
 def verify() -> int:
@@ -58,19 +120,23 @@ def verify() -> int:
         return rc
     print("== sharded smoke (2 host-platform devices) ==", flush=True)
     code = textwrap.dedent(_SMOKE.format(
-        qrel=os.path.join(ROOT, "tests", "fixtures", "conformance.qrel"),
-        run=os.path.join(ROOT, "tests", "fixtures", "conformance.run")))
-    return subprocess.run(
+        qrel=_fixture("conformance.qrel"), run=_fixture("conformance.run")))
+    rc = subprocess.run(
         [sys.executable, "-c", code], cwd=ROOT,
         env=_env({"XLA_FLAGS":
                   "--xla_force_host_platform_device_count=2"})).returncode
+    if rc != 0:
+        return rc
+    return serve_smoke()
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv == ["verify"]:
         return verify()
-    print("usage: python -m repro.dev verify", file=sys.stderr)
+    if argv == ["serve-smoke"]:
+        return serve_smoke()
+    print("usage: python -m repro.dev {verify|serve-smoke}", file=sys.stderr)
     return 2
 
 

@@ -22,11 +22,13 @@ else:  # pre-0.6 JAX: experimental API, `check_rep` instead of `check_vma`
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
-__all__ = ["shard_map", "ShardedEvaluator", "ShardedResult"]
+__all__ = ["shard_map", "ShardedEvaluator", "ShardedResult",
+           "default_mesh", "select_backend"]
 
 
 def __getattr__(name):  # lazy: sharded_evaluator imports kernels/measures
-    if name in ("ShardedEvaluator", "ShardedResult"):
+    if name in ("ShardedEvaluator", "ShardedResult", "default_mesh",
+                "select_backend"):
         from repro.distributed import sharded_evaluator as _se
 
         return getattr(_se, name)

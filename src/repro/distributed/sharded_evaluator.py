@@ -42,7 +42,8 @@ Usage::
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+import functools
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import measures as M
 from repro.core import streaming
+from repro.core.evaluator import concat_run_buffers
 from repro.distributed import shard_map
 from repro.kernels import ops
 
@@ -63,9 +65,32 @@ class ShardedResult(NamedTuple):
     aggregates: Dict[str, float]
 
 
-def _default_mesh(axis_name: str = "data"):
-    """One 1-D mesh spanning every visible device."""
+@functools.lru_cache(maxsize=None)
+def default_mesh(axis_name: str = "data"):
+    """One shared 1-D mesh spanning every visible device.
+
+    Memoized so every :class:`ShardedEvaluator` built without an explicit
+    mesh (each serve-layer collection, every CLI ``--sharded`` call in a
+    process) reuses ONE mesh object — and therefore one jit cache entry per
+    batch geometry — instead of re-creating meshes per collection.
+    """
     return jax.make_mesh((len(jax.devices()),), (axis_name,))
+
+
+def select_backend(backend: str = "auto") -> str:
+    """Resolve an evaluation-backend name to ``"single"`` or ``"sharded"``.
+
+    ``"auto"`` picks the sharded pipeline exactly when more than one device
+    is visible — on a 1-device host the single-device evaluator computes the
+    same values without the shard_map dispatch overhead.  The serve layer
+    calls this once per collection registration.
+    """
+    if backend in ("single", "sharded"):
+        return backend
+    if backend != "auto":
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected auto|single|sharded)")
+    return "sharded" if len(jax.devices()) > 1 else "single"
 
 
 class ShardedEvaluator:
@@ -82,7 +107,7 @@ class ShardedEvaluator:
 
     def __init__(self, evaluator, mesh=None, interpret: Optional[bool] = None):
         self.evaluator = evaluator
-        self.mesh = mesh if mesh is not None else _default_mesh()
+        self.mesh = mesh if mesh is not None else default_mesh()
         if len(self.mesh.axis_names) != 1:
             raise ValueError(
                 f"need a 1-D query mesh, got axes {self.mesh.axis_names}")
@@ -177,9 +202,50 @@ class ShardedEvaluator:
         stacked, aggs = self._dispatch(batch)
         nq = len(buf.qids)
         table = np.asarray(stacked)[:nq]
-        per_query = {
+        per_query = self._rows_to_dicts(buf.qids, table)
+        return ShardedResult(per_query, M.finalize_aggregates(
+            {k: float(v) for k, v in aggs.items()}))
+
+    def evaluate_buffers(self, bufs: Sequence) -> List[ShardedResult]:
+        """Evaluate several buffers in ONE sharded dispatch (serve layer).
+
+        The multi-device counterpart of
+        :meth:`repro.core.RelevanceEvaluator.evaluate_buffers`: the buffers
+        are stacked on the query axis, padded to the mesh, and shard_mapped
+        once; per-query rows split back by each buffer's query count.  The
+        device-side psum aggregates cover the whole coalesced batch, so
+        per-request aggregates are recomputed on host from each request's
+        rows with the same (sum / count) formula.
+        """
+        bufs = list(bufs)
+        if not bufs:
+            return []
+        nonempty = [b for b in bufs if len(b)]
+        if not nonempty:
+            return [ShardedResult({}, {}) for _ in bufs]
+        big = concat_run_buffers(nonempty)
+        batch = self.evaluator.batch_from_buffer(
+            big, q_multiple=self.n_shards)
+        stacked, _ = self._dispatch(batch)
+        table = np.asarray(stacked)[:len(big.qids)]
+        results: List[ShardedResult] = []
+        lo = 0
+        for buf in bufs:
+            nq = len(buf.qids)
+            rows = table[lo:lo + nq]
+            lo += nq
+            if not nq:
+                results.append(ShardedResult({}, {}))
+                continue
+            aggs = {k: float(rows[:, j].sum(dtype=np.float32) / np.float32(nq))
+                    for j, k in enumerate(self.keys)}
+            results.append(ShardedResult(
+                self._rows_to_dicts(buf.qids, rows),
+                M.finalize_aggregates(aggs)))
+        return results
+
+    def _rows_to_dicts(self, qids, table) -> Dict[str, Dict[str, float]]:
+        return {
             qid: {k: float(table[i, j]) for j, k in enumerate(self.keys)}
-            for i, qid in enumerate(buf.qids)
+            for i, qid in enumerate(qids)
         }
-        return ShardedResult(per_query,
-                             {k: float(v) for k, v in aggs.items()})

@@ -1,0 +1,39 @@
+"""Async evaluation serving on the tokenized (``RunBuffer``) path.
+
+The paper makes single evaluations cheap; this package makes MANY concurrent
+evaluations cheap: an asyncio service that interns each qrel once (bounded
+LRU of evaluators), coalesces concurrent requests for the same collection
+into one batched backend call, and answers over stdio or TCP JSON-lines.
+
+    >>> import asyncio
+    >>> from repro.serve import EvaluationService
+    >>> async def demo():
+    ...     svc = EvaluationService()
+    ...     svc.register_qrel('t', {'q1': {'d1': 1}}, ('recip_rank',))
+    ...     res = await svc.evaluate('t', run={'q1': {'d1': 1.0}})
+    ...     return res.per_query['q1']['recip_rank']
+    >>> asyncio.run(demo())
+    1.0
+
+See ``docs/SERVING.md`` for the request lifecycle, coalescing windows,
+cache-eviction and backpressure semantics, and the wire protocol;
+``python -m repro.serve --help`` for the front-end flags.
+"""
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import LRUCache
+from repro.serve.frontend import (handle_line, handle_request, main,
+                                  serve_stdio, serve_tcp)
+from repro.serve.service import EvaluationService, ServeResult
+
+__all__ = [
+    "EvaluationService",
+    "ServeResult",
+    "MicroBatcher",
+    "LRUCache",
+    "handle_request",
+    "handle_line",
+    "serve_tcp",
+    "serve_stdio",
+    "main",
+]

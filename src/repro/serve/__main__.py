@@ -1,0 +1,8 @@
+"""``python -m repro.serve`` — run the evaluation service front-end."""
+
+import sys
+
+from repro.serve.frontend import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,252 @@
+"""JSON-lines front-ends for the evaluation service: stdio and TCP.
+
+One request per line, one JSON object per response line::
+
+    {"op": "register_qrel", "id": 1, "qrel_id": "web",
+     "qrel": {"q1": {"d1": 1}}, "measures": ["map"]}
+    {"op": "evaluate", "id": 2, "qrel_id": "web",
+     "run": {"q1": {"d1": 1.0}}}
+
+Responses echo the request ``id`` (responses may arrive out of order —
+requests are handled concurrently so the service can coalesce them)::
+
+    {"id": 1, "ok": true, "result": {...}}
+    {"id": 2, "ok": true, "result": {"per_query": {...}, "aggregates": {...}}}
+    {"id": 3, "ok": false, "error": "unknown qrel_id 'nope': ..."}
+
+Operations: ``register_qrel``, ``register_run``, ``evaluate``, ``drop_qrel``,
+``stats``, ``ping``.  Field names mirror the keyword arguments of
+:class:`repro.serve.service.EvaluationService`.
+
+Front-ends::
+
+    python -m repro.serve --qrel tests/fixtures/conformance.qrel -m map
+    python -m repro.serve --tcp 127.0.0.1:9090 ...
+
+The default front-end reads stdin and writes stdout (one process per
+client); ``--tcp`` serves any number of concurrent connections, and requests
+from DIFFERENT connections coalesce into the same backend batches.  The
+``-m`` / ``-l`` measure flags are shared with the one-shot CLI
+(:func:`repro.cli.add_measure_args`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+from typing import Optional, Sequence, Tuple
+
+from repro.serve.service import EvaluationService, ServeResult
+
+
+async def handle_request(service: EvaluationService, req: dict) -> dict:
+    """Execute one decoded protocol request; never raises."""
+    rid = req.get("id")
+    try:
+        op = req.get("op")
+        if op == "register_qrel":
+            result = service.register_qrel(
+                req["qrel_id"], req["qrel"], measures=req.get("measures"),
+                relevance_level=int(req.get("relevance_level", 1)),
+                backend=req.get("backend"))
+        elif op == "register_run":
+            result = service.register_run(
+                req["qrel_id"], req["run_id"], run=req.get("run"),
+                tokens=req.get("tokens"))
+        elif op == "evaluate":
+            res: ServeResult = await service.evaluate(
+                req["qrel_id"], run=req.get("run"),
+                tokens=req.get("tokens"), run_ref=req.get("run_ref"),
+                scores=req.get("scores"))
+            result = {"per_query": res.per_query,
+                      "aggregates": res.aggregates}
+        elif op == "drop_qrel":
+            result = {"dropped": service.drop_qrel(req["qrel_id"])}
+        elif op == "stats":
+            result = service.stats()
+        elif op == "ping":
+            result = "pong"
+        else:
+            raise ValueError(f"unknown op {op!r}")
+    except Exception as exc:  # noqa: BLE001 — protocol errors go to the client
+        return {"id": rid, "ok": False,
+                "error": f"{type(exc).__name__}: {exc}"}
+    return {"id": rid, "ok": True, "result": result}
+
+
+async def handle_line(service: EvaluationService, line: str) -> str:
+    """One protocol line in, one JSON response line out."""
+    try:
+        req = json.loads(line)
+        if not isinstance(req, dict):
+            raise ValueError("request must be a JSON object")
+    except ValueError as exc:
+        return json.dumps({"id": None, "ok": False,
+                           "error": f"bad request line: {exc}"})
+    return json.dumps(await handle_request(service, req))
+
+
+# -- TCP ---------------------------------------------------------------------
+
+
+async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
+                    port: int = 0):
+    """Start the TCP front-end; returns the ``asyncio`` server object.
+
+    Each connection is a JSON-lines stream.  Every request line becomes its
+    own task, so slow evaluations never block the connection's reader — and
+    concurrent requests (same or different connections) coalesce in the
+    service's micro-batcher.  Pass ``port=0`` for an ephemeral port
+    (``server.sockets[0].getsockname()[1]``).
+    """
+
+    async def client(reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        wlock = asyncio.Lock()
+        tasks = set()
+
+        async def one(raw: bytes) -> None:
+            resp = await handle_line(service, raw.decode("utf-8",
+                                                         "replace"))
+            try:
+                async with wlock:
+                    writer.write(resp.encode() + b"\n")
+                    await writer.drain()
+            except (ConnectionError, OSError):
+                # client went away before reading its response — the
+                # evaluation already happened; nothing useful to raise
+                # (an unretrieved task exception would just spam stderr)
+                pass
+
+        try:
+            while True:
+                raw = await reader.readline()
+                if not raw:
+                    break
+                if not raw.strip():
+                    continue
+                t = asyncio.get_running_loop().create_task(one(raw))
+                tasks.add(t)
+                t.add_done_callback(tasks.discard)
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    return await asyncio.start_server(client, host, port)
+
+
+# -- stdio -------------------------------------------------------------------
+
+
+async def serve_stdio(service: EvaluationService, in_stream=None,
+                      out_stream=None) -> None:
+    """JSON-lines over stdin/stdout until EOF (one process per client)."""
+    loop = asyncio.get_running_loop()
+    in_stream = sys.stdin if in_stream is None else in_stream
+    out_stream = sys.stdout if out_stream is None else out_stream
+    wlock = asyncio.Lock()
+    tasks = set()
+
+    async def one(line: str) -> None:
+        resp = await handle_line(service, line)
+        async with wlock:
+            out_stream.write(resp + "\n")
+            out_stream.flush()
+
+    while True:
+        line = await loop.run_in_executor(None, in_stream.readline)
+        if not line:
+            break
+        if not line.strip():
+            continue
+        t = loop.create_task(one(line))
+        tasks.add(t)
+        t.add_done_callback(tasks.discard)
+    if tasks:
+        await asyncio.gather(*tasks, return_exceptions=True)
+
+
+# -- entry point -------------------------------------------------------------
+
+
+def _parse_hostport(spec: str) -> Tuple[str, int]:
+    host, _, port = spec.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+def build_service(args) -> EvaluationService:
+    """Service + optional default collection from parsed CLI args."""
+    from repro import cli
+    from repro.core import trec
+
+    service = EvaluationService(
+        max_collections=args.max_collections,
+        window=args.window_ms / 1e3, max_batch=args.max_batch,
+        max_pending=args.max_pending, backend=args.backend)
+    if args.qrel:
+        info = service.register_qrel(
+            args.qrel_id, trec.load_qrel(args.qrel),
+            measures=cli.resolve_measures(args.measures),
+            relevance_level=args.level)
+        print(f"registered qrel {info['qrel_id']!r}: "
+              f"{info['n_queries']} queries, backend={info['backend']}",
+              file=sys.stderr, flush=True)
+    return service
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from repro import cli
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="Async evaluation service speaking JSON-lines over "
+                    "stdio (default) or TCP.")
+    ap.add_argument("--tcp", metavar="HOST:PORT",
+                    help="serve TCP instead of stdio (port 0 = ephemeral)")
+    ap.add_argument("--qrel", metavar="PATH",
+                    help="pre-register this TREC qrel file at startup")
+    ap.add_argument("--qrel-id", default="default", metavar="ID",
+                    help="collection id for --qrel (default: 'default')")
+    cli.add_measure_args(ap)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "single", "sharded"),
+                    help="evaluation backend (auto: sharded iff >1 device)")
+    ap.add_argument("--window-ms", type=float, default=2.0, metavar="MS",
+                    help="coalescing window in milliseconds (default 2)")
+    ap.add_argument("--max-batch", type=int, default=64, metavar="N",
+                    help="flush a window early at N pending requests")
+    ap.add_argument("--max-collections", type=int, default=8, metavar="N",
+                    help="LRU capacity for resident collections")
+    ap.add_argument("--max-pending", type=int, default=256, metavar="N",
+                    help="in-flight request cap (backpressure)")
+    args = ap.parse_args(argv)
+
+    async def run() -> None:
+        service = build_service(args)
+        if args.tcp:
+            host, port = _parse_hostport(args.tcp)
+            server = await serve_tcp(service, host, port)
+            addr = server.sockets[0].getsockname()
+            print(f"serving on {addr[0]}:{addr[1]}", file=sys.stderr,
+                  flush=True)
+            async with server:
+                await server.serve_forever()
+        else:
+            await serve_stdio(service)
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

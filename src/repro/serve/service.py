@@ -1,0 +1,269 @@
+"""The asyncio evaluation service: collections, coalescing, backpressure.
+
+:class:`EvaluationService` turns the library's session API into serving
+infrastructure.  The request lifecycle (documented end to end in
+``docs/SERVING.md``):
+
+1. **register** — ``register_qrel`` interns a qrel once into a
+   :class:`repro.core.RelevanceEvaluator` held in a bounded LRU cache
+   (:mod:`repro.serve.cache`); registering more collections than
+   ``max_collections`` evicts the least-recently-used one.
+2. **prepare** — each ``evaluate`` request is tokenized against the cached
+   vocabulary into a :class:`repro.core.RunBuffer` (dict run, flat token
+   payload, or a pre-registered run re-scored via ``run_ref`` + fresh
+   ``scores`` — the zero-string-work hot path).
+3. **coalesce** — concurrent requests for the same collection are
+   micro-batched (:mod:`repro.serve.batcher`): everything arriving within
+   ``window`` seconds (or until ``max_batch``) becomes ONE backend
+   ``evaluate_buffers`` call on an executor thread.
+4. **respond** — per-query rows split back per request; every response
+   carries the pytrec_eval-style per-query mapping plus trec_eval's summary
+   aggregates (geometric-mean measures exponentiated).
+
+Backpressure: at most ``max_pending`` requests may be in flight; beyond
+that, ``evaluate`` awaits a semaphore slot, so socket clients see their
+submissions delayed rather than the service growing an unbounded queue.
+
+Backend selection: per collection, ``"single"`` (the in-process evaluator),
+``"sharded"`` (:class:`repro.distributed.ShardedEvaluator` over the shared
+device mesh), or ``"auto"`` (sharded exactly when >1 device is visible).
+Coalescing itself never changes values (either backend returns results
+bit-identical to its own per-request calls); between the two backends the
+usual fused-kernel caveat applies — exact on integer-representable
+cumulative sums, ~1 ulp on arbitrary float DCG sums (see
+``docs/ARCHITECTURE.md``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+from repro.core import RelevanceEvaluator, aggregate_results
+from repro.core.evaluator import RunBuffer
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import LRUCache
+
+
+class ServeResult(NamedTuple):
+    """One request's evaluation: per-query values + summary aggregates."""
+
+    per_query: Dict[str, Dict[str, float]]
+    aggregates: Dict[str, float]
+
+
+class _Collection:
+    """One registered qrel: its evaluator, backend, and named run buffers."""
+
+    __slots__ = ("qrel_id", "evaluator", "backend", "runs", "_sharded")
+
+    def __init__(self, qrel_id: str, evaluator: RelevanceEvaluator,
+                 backend: str):
+        self.qrel_id = qrel_id
+        self.evaluator = evaluator
+        self.backend = backend
+        self.runs: Dict[str, RunBuffer] = {}
+        self._sharded = None
+
+    @property
+    def sharded(self):
+        if self._sharded is None:
+            from repro.distributed.sharded_evaluator import ShardedEvaluator
+
+            self._sharded = ShardedEvaluator(self.evaluator)
+        return self._sharded
+
+
+class EvaluationService:
+    """Async evaluation over cached collections with request coalescing.
+
+    Single-event-loop by design (create it inside the loop that serves).
+    Collection registration is synchronous (the string work happens in the
+    caller); ``evaluate`` is a coroutine resolving to a
+    :class:`ServeResult`.
+
+    >>> import asyncio
+    >>> from repro.serve import EvaluationService
+    >>> async def demo():
+    ...     svc = EvaluationService(window=0.005)
+    ...     svc.register_qrel('web', {'q1': {'d1': 1, 'd2': 0}}, ('map',))
+    ...     a, b = await asyncio.gather(
+    ...         svc.evaluate('web', run={'q1': {'d1': 9.0, 'd2': 1.0}}),
+    ...         svc.evaluate('web', run={'q1': {'d1': 0.0, 'd2': 1.0}}))
+    ...     return (a.per_query['q1']['map'], b.per_query['q1']['map'],
+    ...             svc.stats()['backend_calls'])
+    >>> asyncio.run(demo())  # two concurrent requests, ONE backend call
+    (1.0, 0.5, 1)
+    """
+
+    def __init__(self, *, max_collections: int = 8, window: float = 0.002,
+                 max_batch: int = 64, max_pending: int = 256,
+                 backend: str = "auto"):
+        from repro.distributed.sharded_evaluator import select_backend
+
+        self._select_backend = select_backend
+        self.default_backend = backend
+        self._collections = LRUCache(max_collections)
+        self._batcher = MicroBatcher(self._flush, window=window,
+                                     max_batch=max_batch)
+        self.max_pending = int(max_pending)
+        self._sem = asyncio.Semaphore(self.max_pending)
+        self._stats = {"requests": 0, "backend_calls": 0, "in_flight": 0,
+                       "peak_in_flight": 0}
+
+    # -- registration ---------------------------------------------------------
+
+    def register_qrel(self, qrel_id: str, qrel, measures=None,
+                      relevance_level: int = 1,
+                      backend: Optional[str] = None) -> Dict[str, object]:
+        """Intern a qrel into a cached evaluator; returns collection info.
+
+        ``measures`` defaults to every supported family.  ``backend``
+        overrides the service default for this collection
+        (``auto``/``single``/``sharded``).  Re-registering a ``qrel_id``
+        replaces the collection (and drops its registered runs).
+        """
+        from repro.core import supported_measures
+
+        resolved = self._select_backend(backend or self.default_backend)
+        ev = RelevanceEvaluator(qrel, measures or supported_measures,
+                                relevance_level=relevance_level)
+        self._collections.put(qrel_id, _Collection(qrel_id, ev, resolved))
+        return {"qrel_id": qrel_id, "n_queries": len(ev._qrel),
+                "vocab_size": int(len(ev.vocab)), "backend": resolved,
+                "measure_keys": list(ev.measure_keys)}
+
+    def register_run(self, qrel_id: str, run_id: str, run=None,
+                     tokens=None) -> Dict[str, object]:
+        """Tokenize a run once and pin it under ``run_id`` for re-scoring.
+
+        Subsequent ``evaluate(qrel_id, run_ref=run_id, scores=[...])`` calls
+        skip ALL string work — the serving analogue of the session API's
+        ``RunBuffer`` contract.
+        """
+        col = self._require(qrel_id)
+        buf = self._prepare(col, run=run, tokens=tokens, run_ref=None,
+                            scores=None, allow_unscored=True)
+        col.runs[run_id] = buf
+        return {"qrel_id": qrel_id, "run_id": run_id,
+                "n_queries": len(buf), "n_docs": int(buf.qidx.shape[0])}
+
+    def drop_qrel(self, qrel_id: str) -> bool:
+        """Explicitly release a collection (True if it was resident)."""
+        return self._collections.pop(qrel_id) is not None
+
+    # -- evaluation -----------------------------------------------------------
+
+    async def evaluate(self, qrel_id: str, run=None, tokens=None,
+                       run_ref: Optional[str] = None,
+                       scores=None) -> ServeResult:
+        """Evaluate one request; coalesced with concurrent same-qrel calls.
+
+        Exactly one of ``run`` (dict ``{qid: {docno: score}}``), ``tokens``
+        (a ``{"qids", "counts", "tokens", "scores"}`` payload for
+        ``buffer_from_tokens``), or ``run_ref`` (a ``register_run`` name)
+        selects the documents; ``scores`` optionally replaces the scores
+        (required with ``run_ref`` unless the registered run carried its
+        own).
+        """
+        col = self._require(qrel_id)
+        self._stats["requests"] += 1  # counted at arrival, before any await
+        if run is not None:
+            # Dict-run tokenization (~100ms at Q=1000×D=1000) runs on an
+            # executor thread so it never stalls the event loop — other
+            # connections keep reading and coalescing window timers keep
+            # firing.  Safe: the evaluator is immutable after construction.
+            # The tokens/run_ref payloads stay on-loop: their preparation
+            # is a bounds check plus at most one float32 copy.
+            buf = await asyncio.to_thread(
+                self._prepare, col, run=run, tokens=tokens, run_ref=run_ref,
+                scores=scores, allow_unscored=False)
+        else:
+            buf = self._prepare(col, run=run, tokens=tokens, run_ref=run_ref,
+                                scores=scores, allow_unscored=False)
+        async with self._sem:
+            n = self._stats["in_flight"] = self._stats["in_flight"] + 1
+            self._stats["peak_in_flight"] = max(
+                self._stats["peak_in_flight"], n)
+            try:
+                return await self._batcher.submit(qrel_id, (col, buf))
+            finally:
+                self._stats["in_flight"] -= 1
+
+    async def _flush(self, qrel_id: str,
+                     items: List[Tuple[_Collection, RunBuffer]]):
+        """One coalesced backend call per collection generation."""
+        out: List[Optional[ServeResult]] = [None] * len(items)
+        groups: Dict[int, List[int]] = {}
+        for i, (col, _) in enumerate(items):
+            groups.setdefault(id(col), []).append(i)
+        for idxs in groups.values():
+            col = items[idxs[0]][0]
+            bufs = [items[i][1] for i in idxs]
+            self._stats["backend_calls"] += 1
+            if col.backend == "sharded":
+                results = await asyncio.to_thread(
+                    col.sharded.evaluate_buffers, bufs)
+                packed = [ServeResult(r.per_query, r.aggregates)
+                          for r in results]
+            else:
+                tables = await asyncio.to_thread(
+                    col.evaluator.evaluate_buffers, bufs)
+                packed = [ServeResult(pq, aggregate_results(pq))
+                          for pq in tables]
+            for i, res in zip(idxs, packed):
+                out[i] = res
+        return out
+
+    # -- plumbing -------------------------------------------------------------
+
+    def _require(self, qrel_id: str) -> _Collection:
+        col = self._collections.get(qrel_id)
+        if col is None:
+            raise KeyError(
+                f"unknown qrel_id {qrel_id!r}: register_qrel first "
+                f"(resident: {sorted(self._collections.keys())})")
+        return col
+
+    def _prepare(self, col: _Collection, *, run, tokens, run_ref, scores,
+                 allow_unscored: bool) -> RunBuffer:
+        given = [name for name, v in
+                 (("run", run), ("tokens", tokens), ("run_ref", run_ref))
+                 if v is not None]
+        if len(given) != 1:
+            raise ValueError(
+                f"need exactly one of run/tokens/run_ref, got {given or 'none'}")
+        ev = col.evaluator
+        if run is not None:
+            buf = ev.tokenize_run(run)
+        elif tokens is not None:
+            if not isinstance(tokens, dict):
+                raise ValueError("tokens must be a mapping with "
+                                 "qids/counts/tokens[/scores]")
+            buf = ev.buffer_from_tokens(
+                tokens["qids"], tokens["counts"], tokens["tokens"],
+                scores=tokens.get("scores"))
+        else:
+            if run_ref not in col.runs:
+                raise KeyError(
+                    f"unknown run_ref {run_ref!r} for qrel "
+                    f"{col.qrel_id!r} (registered: {sorted(col.runs)})")
+            buf = col.runs[run_ref]
+        if scores is not None:
+            buf = buf.with_scores(scores)
+        if buf.scores is None and not allow_unscored:
+            raise ValueError("request has no scores: the run/tokens payload "
+                             "carried none and no scores= were given")
+        return buf
+
+    def stats(self) -> Dict[str, object]:
+        """Counters for monitoring and the protocol's ``stats`` op."""
+        out = dict(self._stats)
+        out["flushes"] = self._batcher.flushes
+        out["coalesced"] = self._batcher.submitted - self._batcher.flushes
+        out["window"] = self._batcher.window
+        out["max_batch"] = self._batcher.max_batch
+        out["max_pending"] = self.max_pending
+        out["cache"] = self._collections.stats()
+        out["collections"] = sorted(self._collections.keys())
+        return out

@@ -8,6 +8,7 @@ rather than to the code under test.
 """
 
 import io
+import math
 import os
 import subprocess
 import sys
@@ -62,6 +63,8 @@ def test_golden_matches_independent_reference():
     for key in cli.ordered_keys(sorted(supported_measures)):
         total = sum(v[key] for v in per_query.values())
         want[key] = total if key in cli.SUM_MEASURES else total / n_q
+        if key in cli.AGGREGATE_ONLY:  # geometric mean: exp of the mean log
+            want[key] = math.exp(want[key])
     want["num_q"] = float(n_q)
     want["runid"] = "tag"
 
@@ -75,9 +78,11 @@ def test_golden_matches_independent_reference():
 def test_cli_per_query_blocks():
     """-q prints query-major blocks (run order) and reference values."""
     lines = _cli(["-q", QREL, RUN]).splitlines()
-    keys = cli.ordered_keys(sorted(supported_measures))
-    # q1 block, q2 block, then runid + num_q + summary
-    assert len(lines) == 2 * len(keys) + len(keys) + 2
+    all_keys = cli.ordered_keys(sorted(supported_measures))
+    # aggregate-only measures (gm_map) print no per-query line
+    keys = [k for k in all_keys if k not in cli.AGGREGATE_ONLY]
+    # q1 block, q2 block, then runid + num_q + summary (all keys)
+    assert len(lines) == 2 * len(keys) + len(all_keys) + 2
     q1 = lines[:len(keys)]
     q2 = lines[len(keys):2 * len(keys)]
     assert all(l.split("\t")[1] == "q1" for l in q1)
@@ -126,6 +131,17 @@ def test_cli_complete_flag_averages_over_qrel_queries(tmp_path):
 
 def test_cli_sharded_flag_byte_identical():
     assert _cli(["--sharded", QREL, RUN]) == _golden_text()
+
+
+def test_cli_gm_map_is_aggregate_only():
+    """-m gm_map: no per-query lines even under -q; geometric-mean summary."""
+    out = _cli(["-q", "-m", "gm_map", "-m", "map", QREL, RUN]).splitlines()
+    per_query = [l for l in out if l.split("\t")[1] != "all"]
+    assert all(l.split("\t")[0].rstrip() == "map" for l in per_query)
+    names = {l.split("\t")[0].rstrip(): l.split("\t")[2]
+             for l in out if l.split("\t")[1] == "all"}
+    # both fixture queries have AP 0.5 → geometric mean 0.5 too
+    assert names["gm_map"] == "0.5000" and names["map"] == "0.5000"
 
 
 def test_cli_rejects_unknown_measure(capsys):

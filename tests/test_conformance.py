@@ -46,6 +46,7 @@ LOG2_5 = math.log2(5)
 EXPECTED = {
     "q1": {
         "map": 0.5,  # (1/1 + 2/4) / 3
+        "gm_map": math.log(0.5),  # log contribution; aggregate = exp(mean)
         "recip_rank": 1.0,
         "Rprec": 1 / 3,  # 1 relevant in the top R=3
         "bpref": 1 / 3,  # APPLE clean, BANANA below 1 nonrel (bound 1)
@@ -69,6 +70,7 @@ EXPECTED = {
     },
     "q2": {
         "map": 0.5,
+        "gm_map": math.log(0.5),
         "recip_rank": 0.5,
         "Rprec": 0.0,  # rank-1 doc (EGG) is non-relevant
         "bpref": 0.0,  # the one relevant doc sits below the one nonrel
@@ -117,6 +119,9 @@ def _trec_eval_reference(rels, R, N, ideal):
         elif r is not None:
             nonrel_above += 1
     out["bpref"] = bp / R if R else 0.0
+    # gm_map per-query contribution: log of the clipped AP (trec_eval
+    # accumulates exactly this; the summary row is exp of the mean).
+    out["gm_map"] = math.log(max(out["map"], 1e-5))
     # ndcg family (linear gain)
     dcg = [0.0]
     for i, r in enumerate(rels):
@@ -204,6 +209,41 @@ def test_array_parse_path_conforms(fixture_results):
         for key in fixture_results[qid]:
             assert res[qid][key] == pytest.approx(
                 fixture_results[qid][key], abs=1e-6), (qid, key)
+
+
+def test_gm_map_hand_computed_reference():
+    """Geometric-mean MAP against values computed entirely by hand.
+
+    q1: relevant d1 ranked first → AP = 1.  q2: the only relevant doc (d2)
+    is not retrieved → AP = 0, clipped to GM_MIN = 1e-5.  Geometric mean =
+    exp((ln 1 + ln 1e-5) / 2) = sqrt(1e-5); the arithmetic MAP is 0.5.
+    """
+    from repro.core import GM_MIN, aggregate_results
+
+    qrel = {"q1": {"d1": 1}, "q2": {"d2": 1}}
+    run = {"q1": {"d1": 2.0, "dx": 1.0}, "q2": {"dy": 1.0}}
+    ev = RelevanceEvaluator(qrel, {"map", "gm_map"})
+    res = ev.evaluate(run)
+    # per-query gm_map is the log contribution
+    assert res["q1"]["gm_map"] == pytest.approx(math.log(1.0), abs=1e-6)
+    assert res["q2"]["gm_map"] == pytest.approx(math.log(GM_MIN), rel=1e-6)
+    agg = aggregate_results(res)
+    assert agg["map"] == pytest.approx(0.5, abs=1e-6)
+    assert agg["gm_map"] == pytest.approx(math.sqrt(1e-5), rel=1e-4)
+
+
+def test_gm_map_sharded_aggregate_matches():
+    """The sharded path must exp the gm_map aggregate too."""
+    from repro.core import aggregate_results
+    from repro.distributed import ShardedEvaluator
+
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    ev = RelevanceEvaluator(qrel, {"map", "gm_map"})
+    res = ShardedEvaluator(ev).evaluate(run)
+    want = aggregate_results(ev.evaluate(run))
+    assert res.aggregates["gm_map"] == pytest.approx(want["gm_map"], rel=1e-6)
+    assert res.aggregates["gm_map"] == pytest.approx(0.5, abs=1e-5)
 
 
 def test_qrel_array_parse_roundtrip():

@@ -19,7 +19,8 @@ def _python_blocks(path):
         return _BLOCK.findall(fh.read())
 
 
-@pytest.mark.parametrize("path", ["README.md", "docs/ARCHITECTURE.md"])
+@pytest.mark.parametrize("path", ["README.md", "docs/ARCHITECTURE.md",
+                                  "docs/SERVING.md", "docs/CONFORMANCE.md"])
 def test_doc_code_blocks_run(path):
     blocks = _python_blocks(path)
     assert blocks, f"{path} has no python blocks?"
@@ -35,6 +36,10 @@ def test_doc_code_blocks_run(path):
 @pytest.mark.parametrize("module_name", [
     "repro.core.evaluator",
     "repro.core.trec",
+    "repro.serve",
+    "repro.serve.service",
+    "repro.serve.cache",
+    "repro.serve.batcher",
 ])
 def test_docstring_examples(module_name):
     import importlib
@@ -49,5 +54,6 @@ def test_readme_documents_required_sections():
     with open(os.path.join(ROOT, "README.md")) as fh:
         readme = fh.read()
     for needle in ("python -m repro", "make verify", "Module map",
-                   "tokenize_run", "ShardedEvaluator"):
+                   "tokenize_run", "ShardedEvaluator", "repro.serve",
+                   "EvaluationService"):
         assert needle in readme, needle
