@@ -1,16 +1,20 @@
 # Convenience targets; `make verify` is the documented pre-merge check
-# (tier-1 pytest + a 2-device sharded smoke test + the serve smoke test).
+# (tier-1 pytest + a 2-device sharded smoke test + the serve smoke test
+# + the client smoke test).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify serve-smoke test test-all bench
+.PHONY: verify serve-smoke client-smoke test test-all bench
 
 verify:
 	$(PYTHON) -m repro.dev verify
 
 serve-smoke:
 	$(PYTHON) -m repro.dev serve-smoke
+
+client-smoke:
+	$(PYTHON) -m repro.dev client-smoke
 
 test:
 	$(PYTHON) -m pytest -x -q

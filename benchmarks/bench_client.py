@@ -1,0 +1,153 @@
+"""Client segment: end-to-end serving throughput through ``repro.client``.
+
+Where ``bench_serve`` drives the service in-process (no sockets — an upper
+bound), this segment measures what a USER of the service actually sees:
+JSON encoding, a real TCP connection, the server's reader loop, coalescing,
+and response fan-in, end to end.
+
+Protocol: one collection is registered and its run pinned (``register_run``)
+on a live ``serve_tcp`` endpoint (:class:`repro.serve.testing.ServerThread`);
+then
+
+* **raw-socket baseline** — one connection, strict request→response
+  lockstep (depth 1, no client library): the serialize-invoke-wait pattern
+  the paper argues against, ported to the wire;
+* **EvalClient pipelined** — one :class:`repro.client.AsyncEvalClient`
+  connection with ``depth`` worker coroutines keeping ``depth`` requests in
+  flight, so the server's micro-batcher actually coalesces.
+
+Reported per row: sustained ``runs_per_s`` and client-observed p50/p99
+latency.  Pipelining should raise throughput well past the lockstep
+baseline (bigger coalesced batches amortize backend dispatch) at the cost
+of per-request latency — exactly the window/batch trade documented in
+``docs/SERVING.md``.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+#: pipeline depths for the client rows (the acceptance bar is >= 2 depths)
+DEPTHS = (1, 8)
+DEPTHS_FULL = (1, 4, 16, 64)
+
+MEASURES = ("map", "ndcg", "recip_rank")
+
+
+def _percentiles(latencies: List[float]) -> Dict[str, float]:
+    return {
+        "p50_ms": 1e3 * float(np.quantile(latencies, 0.5)),
+        "p99_ms": 1e3 * float(np.quantile(latencies, 0.99)),
+    }
+
+
+def _row(mode: str, depth: int, latencies: List[float],
+         wall: float) -> Dict:
+    row = {"mode": mode, "depth": depth, "requests": len(latencies),
+           "runs_per_s": len(latencies) / wall}
+    row.update(_percentiles(latencies))
+    print(f"client {mode} depth={depth}: {row['runs_per_s']:.1f} runs/s, "
+          f"p50 {row['p50_ms']:.1f}ms, p99 {row['p99_ms']:.1f}ms")
+    return row
+
+
+async def _raw_socket_loop(host: str, port: int, score_sets, requests: int,
+                           warmup: int = 4) -> Dict:
+    """Depth-1 lockstep over a bare socket — no client library at all."""
+    reader, writer = await asyncio.open_connection(host, port)
+
+    async def once(i: int) -> float:
+        req = {"op": "evaluate", "id": i, "qrel_id": "bench",
+               "run_ref": "r", "scores": score_sets[i % len(score_sets)]}
+        t0 = time.perf_counter()
+        writer.write(json.dumps(req).encode() + b"\n")
+        await writer.drain()
+        resp = json.loads(await reader.readline())
+        assert resp["ok"], resp
+        return time.perf_counter() - t0
+
+    for i in range(warmup):
+        await once(i)
+    t0 = time.perf_counter()
+    latencies = [await once(i) for i in range(requests)]
+    wall = time.perf_counter() - t0
+    writer.close()
+    await writer.wait_closed()
+    return _row("raw_socket", 1, latencies, wall)
+
+
+async def _client_pipelined(host: str, port: int, score_sets,
+                            requests: int, depth: int) -> Dict:
+    """One AsyncEvalClient connection, ``depth`` requests kept in flight."""
+    from repro.client import AsyncEvalClient
+
+    client = await AsyncEvalClient.connect(host, port)
+    # warm every coalesced-batch geometry this depth can produce
+    wave = 1
+    while True:
+        await client.evaluate_many("bench", run_ref="r",
+                                   scores_list=score_sets[:wave])
+        if wave >= depth:
+            break
+        wave = min(wave * 2, depth)
+
+    latencies: List[float] = []
+    done = 0
+
+    async def worker(w: int) -> None:
+        nonlocal done
+        k = w
+        while done < requests:
+            t0 = time.perf_counter()
+            await client.evaluate("bench", run_ref="r",
+                                  scores=score_sets[k % len(score_sets)])
+            latencies.append(time.perf_counter() - t0)
+            done += 1
+            k += depth
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*(worker(w) for w in range(depth)))
+    wall = time.perf_counter() - t0
+    await client.aclose()
+    return _row("client", depth, latencies, wall)
+
+
+def run(full: bool = False) -> List[Dict]:
+    from repro.core import RelevanceEvaluator
+    from repro.data.synthetic_ir import synthesize_run
+    from repro.serve.testing import ServerThread
+
+    n_queries, n_docs = (256, 128) if full else (64, 32)
+    requests = 192 if full else 48
+    depths = DEPTHS_FULL if full else DEPTHS
+
+    run_dict, qrel = synthesize_run(n_queries, n_docs)
+    n_scores = int(RelevanceEvaluator(qrel, ("map",))
+                   .tokenize_run(run_dict).qidx.shape[0])
+    rng = np.random.default_rng(0)
+    # pre-generated, pre-listified score sets: the loop measures serving
+    score_sets = [rng.normal(size=n_scores).astype(np.float32).tolist()
+                  for _ in range(min(requests, 32))]
+
+    rows: List[Dict] = []
+    with ServerThread(service_kw=dict(window=0.002, max_batch=64,
+                                      backend="single")) as srv:
+        srv.register_qrel("bench", qrel, MEASURES)
+        srv.register_run("bench", "r", run=run_dict)
+        rows.append(asyncio.run(_raw_socket_loop(
+            srv.host, srv.port, score_sets, requests)))
+        for depth in depths:
+            rows.append(asyncio.run(_client_pipelined(
+                srv.host, srv.port, score_sets, requests, depth)))
+        stats = srv.stats()
+    for row in rows:
+        row.update(n_queries=n_queries, n_docs=n_docs)
+    print(f"client totals: {stats['requests']} evaluate requests -> "
+          f"{stats['backend_calls']} backend calls "
+          f"({stats['flushes']} flushes)")
+    return rows

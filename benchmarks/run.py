@@ -15,6 +15,9 @@ Segments (repeat ``--only`` to pick several):
 * ``serve``     — sustained throughput/latency of the async evaluation
   service (``repro.serve``) at several client-concurrency levels, including
   the request-coalescing factor; see ``bench_serve``.
+* ``client``    — the same serving hot path measured END TO END through a
+  real TCP socket and ``repro.client``: a raw-socket lockstep baseline vs
+  ``AsyncEvalClient`` pipelining at several depths; see ``bench_client``.
 * ``qlearning`` — the paper's RL demo, episodes/s.
 * ``batched``   — dense batched evaluation vs the dict API.
 
@@ -35,16 +38,17 @@ def main(argv=None) -> None:
                     help="paper-scale grids (20 reps, 10k queries)")
     ap.add_argument("--only", action="append", default=None,
                     choices=("rq1", "rq2", "densify", "sharded", "serve",
-                             "qlearning", "batched"),
+                             "client", "qlearning", "batched"),
                     help="segment to run (repeatable; default: all): "
                          "rq1/rq2 = paper figures, densify = run->EvalBatch "
                          "conversion paths, sharded = multi-device scaling, "
                          "serve = async service throughput/latency, "
+                         "client = TCP client library end to end, "
                          "qlearning = RL demo, batched = dense batched eval")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_batched, bench_qlearning, bench_rq1, \
-        bench_rq2, bench_serve, bench_sharded
+    from benchmarks import bench_batched, bench_client, bench_qlearning, \
+        bench_rq1, bench_rq2, bench_serve, bench_sharded
 
     suites = {
         "rq1": bench_rq1.run,
@@ -52,6 +56,7 @@ def main(argv=None) -> None:
         "densify": bench_rq1.densify,
         "sharded": bench_sharded.run,
         "serve": bench_serve.run,
+        "client": bench_client.run,
         "qlearning": bench_qlearning.run,
         "batched": bench_batched.run,
     }
@@ -87,6 +92,10 @@ def main(argv=None) -> None:
         print(f"serve_c{row['concurrency']},"
               f"{1e6 / row['runs_per_s']:.1f},"
               f"runs_per_s={row['runs_per_s']:.1f}")
+    for row in results.get("client", []):
+        print(f"client_{row['mode']}_d{row['depth']},"
+              f"{1e6 / row['runs_per_s']:.1f},"
+              f"p99_ms={row['p99_ms']:.1f}")
     for row in results.get("qlearning", []):
         print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
               f"tail_reward={row['tail_avg_reward']:+.4f}")

@@ -1,0 +1,392 @@
+"""``AsyncEvalClient`` — the asyncio persistent-connection client.
+
+One client = one JSON-lines connection to a ``repro.serve`` front-end (TCP
+or a spawned stdio subprocess) with:
+
+* **request-id correlation** — every request carries a fresh ``id``; a
+  background reader task resolves responses to their waiters, so responses
+  may arrive in ANY order;
+* **pipelining** — any number of requests may be in flight on the one
+  connection (just ``asyncio.gather`` the calls, or use
+  :meth:`evaluate_many`); that is what lets the server's micro-batcher
+  coalesce them into fewer backend calls;
+* **reconnect-with-retry** — if the TCP connection drops before a response
+  arrives, idempotent requests (everything except ``drop_qrel``) are
+  re-sent on a fresh connection with exponential backoff, re-authenticating
+  first when a token is configured;
+* **session-API helpers** — :meth:`register_qrel`, :meth:`register_run`,
+  :meth:`evaluate` (``run=`` | ``tokens=`` | ``run_ref=`` + ``scores=``)
+  mirror :class:`repro.serve.service.EvaluationService` one to one.
+
+>>> import asyncio
+>>> from repro.serve import EvaluationService, serve_tcp
+>>> from repro.client import AsyncEvalClient
+>>> async def demo():
+...     svc = EvaluationService(window=0.005)
+...     svc.register_qrel('web', {'q1': {'d1': 1, 'd2': 0}}, ('map',))
+...     server = await serve_tcp(svc, '127.0.0.1', 0)
+...     port = server.sockets[0].getsockname()[1]
+...     async with await AsyncEvalClient.connect('127.0.0.1', port) as c:
+...         a, b = await c.evaluate_many('web', runs=[
+...             {'q1': {'d1': 9.0, 'd2': 1.0}},
+...             {'q1': {'d1': 0.0, 'd2': 1.0}}])  # pipelined → coalesced
+...     server.close(); await server.wait_closed()
+...     return a.per_query['q1']['map'], b.per_query['q1']['map']
+>>> asyncio.run(demo())
+(1.0, 0.5)
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import json
+import sys
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.client.errors import (ClientError, ConnectionLostError,
+                                 ProtocolError, error_from_response)
+from repro.serve.wire import DEFAULT_FRAME_LIMIT
+
+#: ops safe to re-send after a connection loss: they either replace state
+#: (register_*) or read it.  ``drop_qrel`` is excluded — its *result* is
+#: not idempotent (a retry of a delivered drop reports ``dropped: false``).
+IDEMPOTENT_OPS = frozenset({
+    "register_qrel", "register_run", "evaluate", "stats", "ping", "auth",
+})
+
+
+class EvalResult(NamedTuple):
+    """One evaluation: pytrec_eval-style per-query values + aggregates."""
+
+    per_query: Dict[str, Dict[str, float]]
+    aggregates: Dict[str, float]
+
+
+def _jsonable(obj):
+    """Recursively convert numpy arrays/scalars for JSON encoding."""
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
+class AsyncEvalClient:
+    """A persistent JSON-lines connection to an evaluation server.
+
+    Construct via :meth:`connect` (TCP) or :meth:`spawn_stdio` (a private
+    ``python -m repro.serve`` subprocess).  All request methods may be
+    called concurrently — that is the point: in-flight requests pipeline on
+    the one connection and coalesce server-side.
+
+    ``retries`` bounds automatic re-sends of idempotent requests after a
+    connection loss (TCP only; a dead stdio subprocess is not revivable).
+    ``frame_limit`` must match the server's ``--max-frame-mb`` — requests
+    larger than it raise locally instead of poisoning the stream.
+    """
+
+    def __init__(self, host: Optional[str] = None,
+                 port: Optional[int] = None, *,
+                 token: Optional[str] = None, retries: int = 2,
+                 backoff: float = 0.05,
+                 frame_limit: int = DEFAULT_FRAME_LIMIT):
+        self._host = host
+        self._port = port
+        self._token = token
+        self._retries = int(retries)
+        self._backoff = float(backoff)
+        self._frame_limit = int(frame_limit)
+        self._reader: Optional[asyncio.StreamReader] = None
+        self._writer: Optional[asyncio.StreamWriter] = None
+        self._reader_task: Optional[asyncio.Task] = None
+        self._proc = None  # stdio transport: the server subprocess
+        self._conn_lock = asyncio.Lock()
+        self._pending: Dict[int, asyncio.Future] = {}
+        self._next_id = 0
+        self._closed = False
+        #: client-side counters: requests sent, retries, reconnects
+        self.transport_stats = {"requests": 0, "retries": 0, "reconnects": 0}
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    async def connect(cls, host: str, port: int, **kw) -> "AsyncEvalClient":
+        """Open a TCP connection (and authenticate, if ``token=`` given)."""
+        client = cls(host, port, **kw)
+        try:
+            await client._ensure_connected()
+        except BaseException:
+            await client.aclose()  # don't leak the half-open connection
+            raise
+        return client
+
+    @classmethod
+    async def spawn_stdio(cls, argv: Optional[Sequence[str]] = None,
+                          **kw) -> "AsyncEvalClient":
+        """Spawn ``python -m repro.serve`` and speak over its pipes.
+
+        ``argv`` is the full command line (defaults to
+        ``[sys.executable, "-m", "repro.serve"]``); extra server flags
+        (``--qrel``, ``-m``, ...) go there.  The subprocess is private to
+        this client and exits when the client closes (stdin EOF → the
+        server drains and stops).
+        """
+        client = cls(**kw)
+        argv = list(argv) if argv else [sys.executable, "-m", "repro.serve"]
+        proc = await asyncio.create_subprocess_exec(
+            *argv, stdin=asyncio.subprocess.PIPE,
+            stdout=asyncio.subprocess.PIPE, limit=client._frame_limit)
+        client._proc = proc
+        client._reader, client._writer = proc.stdout, proc.stdin
+        client._start_reader()
+        if client._token is not None:
+            try:
+                await client._auth()
+            except BaseException:
+                await client.aclose()
+                raise
+        return client
+
+    # -- connection management -----------------------------------------------
+
+    @property
+    def _connected(self) -> bool:
+        return self._writer is not None and not self._writer.is_closing()
+
+    async def _ensure_connected(self) -> None:
+        if self._closed:
+            raise ClientError("client is closed")
+        if self._connected:
+            return
+        async with self._conn_lock:
+            if self._connected or self._closed:
+                return
+            if self._host is None or self._port is None:
+                raise ConnectionLostError(
+                    "stdio transport lost (subprocess exited); "
+                    "spawn_stdio again")
+            old_task = self._reader_task
+            reader, writer = await asyncio.open_connection(
+                self._host, self._port, limit=self._frame_limit)
+            if old_task is not None:
+                # retire the previous generation: its read loop fails its
+                # own pending futures (their requests then retry here)
+                old_task.cancel()
+                self.transport_stats["reconnects"] += 1
+            self._reader, self._writer = reader, writer
+            self._pending = {}  # futures are per connection generation
+            self._start_reader()
+            if self._token is not None:
+                await self._auth()
+
+    def _start_reader(self) -> None:
+        self._reader_task = asyncio.get_running_loop().create_task(
+            self._read_loop(self._reader, self._writer, self._pending))
+
+    async def _read_loop(self, reader: asyncio.StreamReader,
+                         writer: asyncio.StreamWriter,
+                         pending: Dict[int, asyncio.Future]) -> None:
+        """Resolve responses to their waiting futures by request id.
+
+        ``pending`` is THIS connection generation's future map — a dying
+        loop must never touch futures registered on a successor connection.
+        """
+        exc: ClientError = ConnectionLostError("connection closed by server")
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = json.loads(line)
+                    if not isinstance(msg, dict):
+                        raise ValueError("response must be a JSON object")
+                except ValueError as e:
+                    raise ProtocolError(
+                        f"bad response line from server: {e}: "
+                        f"{line[:120]!r}") from e
+                self._dispatch(msg, pending)
+        except (ConnectionError, OSError, asyncio.IncompleteReadError) as e:
+            exc = ConnectionLostError(f"connection lost: {e}")
+        except ValueError as e:  # response line over the reader's limit
+            exc = ProtocolError(f"response exceeds frame limit: {e}")
+        except ProtocolError as e:
+            exc = e
+        except asyncio.CancelledError:
+            exc = ConnectionLostError("connection closed")
+            raise
+        finally:
+            if self._writer is writer:  # nobody reconnected us yet
+                self._writer = None
+            with contextlib.suppress(ConnectionError, OSError,
+                                     RuntimeError):
+                writer.close()
+            for fut in pending.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            pending.clear()
+
+    @staticmethod
+    def _dispatch(msg: dict, pending: Dict[int, asyncio.Future]) -> None:
+        rid = msg.get("id")
+        fut = pending.pop(rid, None) if rid is not None else None
+        if fut is None and rid is None and len(pending) == 1:
+            # the server could not read an id (e.g. frame_too_large); with
+            # exactly one request outstanding the correlation is unambiguous
+            _, fut = pending.popitem()
+        if fut is not None and not fut.done():
+            fut.set_result(msg)
+        # anything else: an unsolicited/late line — drop it
+
+    async def _auth(self) -> None:
+        resp = await self._send_and_wait("auth", {"token": self._token})
+        self._check(resp)
+
+    # -- the request engine --------------------------------------------------
+
+    async def _send_and_wait(self, op: str, payload: dict) -> dict:
+        """One raw send on the current connection; no retry, no checks."""
+        rid = self._next_id
+        self._next_id += 1
+        data = json.dumps({"op": op, "id": rid, **payload}).encode() + b"\n"
+        if len(data) > self._frame_limit:
+            raise ClientError(
+                f"request is {len(data)} bytes but the frame limit is "
+                f"{self._frame_limit}; raise frame_limit= here and "
+                f"--max-frame-mb on the server")
+        fut = asyncio.get_running_loop().create_future()
+        pending = self._pending  # this connection generation's map
+        pending[rid] = fut
+        self.transport_stats["requests"] += 1
+        try:
+            self._writer.write(data)
+            await self._writer.drain()
+            return await fut
+        finally:
+            pending.pop(rid, None)
+
+    @staticmethod
+    def _check(resp: dict):
+        if resp.get("ok"):
+            return resp.get("result")
+        raise error_from_response(resp)
+
+    async def _request(self, op: str, **fields):
+        """Send ``op``; retry idempotent ops across reconnects."""
+        payload = _jsonable({k: v for k, v in fields.items()
+                             if v is not None})
+        retryable = op in IDEMPOTENT_OPS and self._host is not None
+        attempt = 0
+        while True:
+            try:
+                # reconnecting is part of the attempt: a refused/dropped
+                # reconnect consumes a retry and backs off like any other
+                # transport failure (AuthError et al. are not caught here)
+                await self._ensure_connected()
+                resp = await self._send_and_wait(op, payload)
+            except (ConnectionError, OSError) as exc:
+                # covers ConnectionLostError from the reader loop and
+                # raw socket errors from connect/write/drain
+                if not retryable or attempt >= self._retries:
+                    if isinstance(exc, ClientError):
+                        raise
+                    raise ConnectionLostError(
+                        f"connection lost: {exc}") from exc
+                attempt += 1
+                self.transport_stats["retries"] += 1
+                await asyncio.sleep(self._backoff * (2 ** (attempt - 1)))
+                continue
+            return self._check(resp)
+
+    # -- session-API mirror --------------------------------------------------
+
+    async def ping(self) -> str:
+        return await self._request("ping")
+
+    async def stats(self) -> dict:
+        """Server-side counters (coalescing, cache, backpressure)."""
+        return await self._request("stats")
+
+    async def register_qrel(self, qrel_id: str, qrel, measures=None,
+                            relevance_level=None, backend=None) -> dict:
+        """Intern a qrel server-side; returns the collection info dict."""
+        return await self._request(
+            "register_qrel", qrel_id=qrel_id, qrel=qrel, measures=measures,
+            relevance_level=relevance_level, backend=backend)
+
+    async def register_run(self, qrel_id: str, run_id: str, run=None,
+                           tokens=None) -> dict:
+        """Pin a tokenized run server-side for ``run_ref`` rescoring."""
+        return await self._request("register_run", qrel_id=qrel_id,
+                                   run_id=run_id, run=run, tokens=tokens)
+
+    async def evaluate(self, qrel_id: str, run=None, tokens=None,
+                       run_ref: Optional[str] = None,
+                       scores=None) -> EvalResult:
+        """Evaluate one run (``run=`` | ``tokens=`` | ``run_ref=+scores=``).
+
+        Concurrent calls pipeline on the connection and coalesce
+        server-side into fewer backend calls.
+        """
+        result = await self._request("evaluate", qrel_id=qrel_id, run=run,
+                                     tokens=tokens, run_ref=run_ref,
+                                     scores=scores)
+        return EvalResult(result["per_query"], result["aggregates"])
+
+    async def evaluate_many(self, qrel_id: str, runs=None, *,
+                            run_ref: Optional[str] = None,
+                            scores_list=None) -> List[EvalResult]:
+        """Pipeline a batch of evaluations (all in flight at once).
+
+        Either ``runs`` (a sequence of dict runs) or ``run_ref`` +
+        ``scores_list`` (one pinned run, many score sets).
+        """
+        if (runs is None) == (scores_list is None):
+            raise ValueError("need exactly one of runs/scores_list")
+        if runs is not None:
+            coros = [self.evaluate(qrel_id, run=r) for r in runs]
+        else:
+            coros = [self.evaluate(qrel_id, run_ref=run_ref, scores=s)
+                     for s in scores_list]
+        return list(await asyncio.gather(*coros))
+
+    async def drop_qrel(self, qrel_id: str) -> bool:
+        """Release a collection; NOT retried on connection loss."""
+        result = await self._request("drop_qrel", qrel_id=qrel_id)
+        return bool(result["dropped"])
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def aclose(self) -> None:
+        """Close the connection (stdio: EOF → the server drains and exits)."""
+        self._closed = True
+        writer, task, proc = self._writer, self._reader_task, self._proc
+        self._writer = None
+        if writer is not None:
+            with contextlib.suppress(ConnectionError, OSError,
+                                     RuntimeError):
+                writer.close()
+                await writer.wait_closed()
+        if proc is not None:
+            try:
+                await asyncio.wait_for(proc.wait(), timeout=30)
+            except asyncio.TimeoutError:  # pragma: no cover - safety net
+                proc.kill()
+                await proc.wait()
+        if task is not None:
+            task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await task
+
+    async def __aenter__(self) -> "AsyncEvalClient":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()

@@ -1,0 +1,65 @@
+"""Exception taxonomy for the evaluation client.
+
+Three failure families, matching what a caller can actually do about them:
+
+* :class:`ServerError` — the server answered ``ok: false``.  The request
+  was *delivered and rejected*; retrying the same bytes will fail the same
+  way.  Carries the machine-readable ``code``
+  (:data:`repro.serve.wire.ERROR_CODES`) and the echoed request id.
+  :class:`AuthError` is the ``auth_required`` / ``bad_auth`` subset.
+* :class:`ConnectionLostError` — the transport died before a response
+  arrived.  Idempotent requests are retried automatically
+  (:class:`~repro.client.aio.AsyncEvalClient`); this surfaces only once
+  retries are exhausted.  Subclasses :class:`ConnectionError` so generic
+  network handling catches it too.
+* :class:`ProtocolError` — the server sent bytes that do not parse as a
+  protocol response; a version mismatch or a corrupted stream, not
+  something to retry.
+
+All of them subclass :class:`ClientError`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class ClientError(Exception):
+    """Base class for every error raised by ``repro.client``."""
+
+
+class ServerError(ClientError):
+    """The server answered ``ok: false`` for this request."""
+
+    def __init__(self, message: str, code: Optional[str] = None,
+                 request_id=None):
+        super().__init__(message)
+        self.code = code or "internal"
+        self.request_id = request_id
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.args[0]}"
+
+
+class AuthError(ServerError):
+    """Authentication failed (``auth_required`` or ``bad_auth``)."""
+
+
+class ConnectionLostError(ClientError, ConnectionError):
+    """The connection dropped before this request's response arrived."""
+
+
+class ProtocolError(ClientError):
+    """The server sent a line that is not a valid protocol response."""
+
+
+#: response codes that map to :class:`AuthError`
+AUTH_CODES = frozenset({"auth_required", "bad_auth"})
+
+
+def error_from_response(resp: dict) -> ServerError:
+    """Build the right exception for an ``ok: false`` response object."""
+    code = resp.get("code") or "internal"
+    message = str(resp.get("error", "unknown server error"))
+    cls = AuthError if code in AUTH_CODES else ServerError
+    return cls(message, code=code, request_id=resp.get("id"))

@@ -12,7 +12,13 @@ README.md:
    ``make serve-smoke``): boot a TCP evaluation service, fire concurrent
    requests from several connections, and assert they were coalesced into
    fewer backend calls with per-query results bit-identical to direct
-   evaluation.
+   evaluation, and
+4. the client smoke test (``python -m repro.dev client-smoke`` /
+   ``make client-smoke``): drive a TCP server AND a stdio subprocess
+   server through ``repro.client.EvalClient`` — pipelined requests that
+   must coalesce, plus one >64 KiB ``register_qrel`` payload on each
+   transport (the frame size that crashed the seed serve layer) —
+   asserting bit-identical results throughout.
 
 Exit status is non-zero if any step fails.  ``make verify`` wraps this.
 """
@@ -91,6 +97,56 @@ _SERVE_SMOKE = """
 """
 
 
+_CLIENT_SMOKE = """
+    import json, sys
+    from repro.client import EvalClient
+    from repro.core import RelevanceEvaluator, trec
+    from repro.serve.testing import ServerThread
+
+    qrel_path = sys.argv[1]
+
+    # a register_qrel payload comfortably past the seed's 64 KiB limit
+    big_qrel = {"Q%04d-%s" % (i, "x" * 80):
+                {"D%04d-%s" % (d, "y" * 80): int((i + d) % 3)
+                 for d in range(24)} for i in range(36)}
+    big_run = {q: {d: float((i * 31 + j * 7) % 97) / 97.0
+                   for j, d in enumerate(docs)}
+               for i, (q, docs) in enumerate(big_qrel.items())}
+    payload = json.dumps({"op": "register_qrel", "qrel_id": "big",
+                          "qrel": big_qrel})
+    assert len(payload) > (1 << 16), len(payload)
+    want = RelevanceEvaluator(big_qrel, ("map", "ndcg")).evaluate(big_run)
+
+    # TCP: persistent connection, pipelining, >64 KiB payload
+    with ServerThread(service_kw=dict(window=0.02)) as srv:
+        with EvalClient(srv.host, srv.port) as client:
+            assert client.ping() == "pong"
+            client.register_qrel("big", big_qrel, ("map", "ndcg"))
+            res = client.evaluate("big", run=big_run)
+            assert res.per_query == want  # bit-identical through TCP
+            many = client.evaluate_many("big", runs=[big_run] * 4)
+            assert all(m.per_query == want for m in many)
+        stats = srv.stats()
+        assert stats["backend_calls"] < stats["requests"], stats
+
+    # stdio: a private subprocess server, same >64 KiB payload
+    with EvalClient.spawn_stdio(
+            [sys.executable, "-m", "repro.serve", "--qrel", qrel_path,
+             "-m", "map", "--window-ms", "1"]) as client:
+        assert client.ping() == "pong"
+        r = client.evaluate("default",
+                            run={"q1": {"APPLE": 2.0, "BANANA": 1.0}})
+        assert r.per_query["q1"]["map"] > 0
+        client.register_qrel("big", big_qrel, ("map", "ndcg"))
+        res = client.evaluate("big", run=big_run)
+        assert res.per_query == want  # and through stdio pipes
+
+    print("client smoke: OK (TCP pipelined + stdio, >64 KiB payloads, "
+          f"{stats['requests']} reqs -> {stats['backend_calls']} backend "
+          "calls, bit-identical)")
+"""
+
+
 def _env(extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
@@ -112,6 +168,16 @@ def serve_smoke() -> int:
                           env=_env()).returncode
 
 
+def client_smoke() -> int:
+    """EvalClient over TCP + stdio with >64 KiB payloads (step 4)."""
+    print("== client smoke (EvalClient: TCP + stdio, large frames) ==",
+          flush=True)
+    code = textwrap.dedent(_CLIENT_SMOKE)
+    return subprocess.run(
+        [sys.executable, "-c", code, _fixture("conformance.qrel")],
+        cwd=ROOT, env=_env()).returncode
+
+
 def verify() -> int:
     print("== tier-1 pytest ==", flush=True)
     rc = subprocess.run([sys.executable, "-m", "pytest", "-x", "-q"],
@@ -127,7 +193,10 @@ def verify() -> int:
                   "--xla_force_host_platform_device_count=2"})).returncode
     if rc != 0:
         return rc
-    return serve_smoke()
+    rc = serve_smoke()
+    if rc != 0:
+        return rc
+    return client_smoke()
 
 
 def main(argv=None) -> int:
@@ -136,7 +205,10 @@ def main(argv=None) -> int:
         return verify()
     if argv == ["serve-smoke"]:
         return serve_smoke()
-    print("usage: python -m repro.dev {verify|serve-smoke}", file=sys.stderr)
+    if argv == ["client-smoke"]:
+        return client_smoke()
+    print("usage: python -m repro.dev {verify|serve-smoke|client-smoke}",
+          file=sys.stderr)
     return 2
 
 

@@ -16,8 +16,11 @@ into one batched backend call, and answers over stdio or TCP JSON-lines.
     1.0
 
 See ``docs/SERVING.md`` for the request lifecycle, coalescing windows,
-cache-eviction and backpressure semantics, and the wire protocol;
-``python -m repro.serve --help`` for the front-end flags.
+cache-eviction and backpressure semantics, and the wire protocol (frame
+limits, error codes, auth, rate limiting — :mod:`repro.serve.wire`);
+``python -m repro.serve --help`` for the front-end flags.  The client side
+of the protocol lives in :mod:`repro.client` (persistent connections,
+pipelining, reconnect-with-retry).
 """
 
 from repro.serve.batcher import MicroBatcher
@@ -25,6 +28,9 @@ from repro.serve.cache import LRUCache
 from repro.serve.frontend import (handle_line, handle_request, main,
                                   serve_stdio, serve_tcp)
 from repro.serve.service import EvaluationService, ServeResult
+from repro.serve.wire import (DEFAULT_FRAME_LIMIT, ERROR_CODES,
+                              OversizedFrame, ProtocolError, TokenBucket,
+                              iter_frames)
 
 __all__ = [
     "EvaluationService",
@@ -36,4 +42,10 @@ __all__ = [
     "serve_tcp",
     "serve_stdio",
     "main",
+    "DEFAULT_FRAME_LIMIT",
+    "ERROR_CODES",
+    "OversizedFrame",
+    "ProtocolError",
+    "TokenBucket",
+    "iter_frames",
 ]

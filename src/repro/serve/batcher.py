@@ -58,6 +58,7 @@ class MicroBatcher:
         #: pending per key: list of (item, future) awaiting the next flush
         self._pending: Dict[str, List[Tuple[Any, asyncio.Future]]] = {}
         self._timers: Dict[str, asyncio.Task] = {}
+        self._inflight = 0  # claimed batches whose flush has not finished
         self.flushes = 0  # completed flush calls (the backend-call count)
         self.submitted = 0
 
@@ -83,7 +84,15 @@ class MicroBatcher:
                 await asyncio.sleep(self.window)
         finally:
             self._timers.pop(key, None)
-        await self._do_flush(key, self._pending.pop(key, []))
+        # Claim the batch and mark it in flight in the same loop step the
+        # timer leaves the registry, so idle() never sees a gap between
+        # "timer gone" and "flush running" (drain relies on this).
+        batch = self._pending.pop(key, [])
+        self._inflight += 1
+        try:
+            await self._do_flush(key, batch)
+        finally:
+            self._inflight -= 1
 
     def _flush_now(self, key: str) -> None:
         """Size cap reached: cancel the window timer, flush immediately.
@@ -97,7 +106,14 @@ class MicroBatcher:
         if timer is not None:
             timer.cancel()
         batch = self._pending.pop(key, [])
-        asyncio.get_running_loop().create_task(self._do_flush(key, batch))
+        self._inflight += 1  # claimed here, released when the task finishes
+        asyncio.get_running_loop().create_task(self._guarded_flush(key, batch))
+
+    async def _guarded_flush(self, key: str, batch) -> None:
+        try:
+            await self._do_flush(key, batch)
+        finally:
+            self._inflight -= 1
 
     async def _do_flush(self, key: str, batch) -> None:
         if not batch:
@@ -122,3 +138,8 @@ class MicroBatcher:
 
     def pending_count(self, key: str) -> int:
         return len(self._pending.get(key, ()))
+
+    def idle(self) -> bool:
+        """True when no batch is accumulating, timed, or mid-flush."""
+        return (not self._pending and not self._timers
+                and self._inflight == 0)

@@ -12,44 +12,118 @@ requests are handled concurrently so the service can coalesce them)::
 
     {"id": 1, "ok": true, "result": {...}}
     {"id": 2, "ok": true, "result": {"per_query": {...}, "aggregates": {...}}}
-    {"id": 3, "ok": false, "error": "unknown qrel_id 'nope': ..."}
+    {"id": 3, "ok": false, "error": "unknown qrel_id 'nope': ...",
+     "code": "not_found"}
 
-Operations: ``register_qrel``, ``register_run``, ``evaluate``, ``drop_qrel``,
-``stats``, ``ping``.  Field names mirror the keyword arguments of
-:class:`repro.serve.service.EvaluationService`.
+Operations: ``register_qrel``, ``register_run``, ``evaluate``,
+``drop_qrel``, ``stats``, ``ping``, ``auth``.  Field names mirror the
+keyword arguments of :class:`repro.serve.service.EvaluationService`.
+
+Every failure is a *response*, never a dead socket: unparseable lines,
+unknown ops, missing fields, and even request lines longer than the frame
+limit (``--max-frame-mb``, default 64 MiB — the asyncio 64 KiB default
+rejected any real qrel payload) come back as ``ok: false`` objects with a
+machine-readable ``code`` from :data:`repro.serve.wire.ERROR_CODES`, and
+the connection keeps serving.
+
+TCP hardening knobs: ``--auth-token`` requires each connection to open
+with ``{"op": "auth", "token": ...}`` before other requests (a wrong token
+is an error response — the connection may retry); ``--rate-limit`` /
+``--burst`` throttle each connection through a token bucket (excess
+requests are *delayed*, never dropped).  On SIGINT/SIGTERM the server
+stops accepting, finishes in-flight batches
+(:meth:`EvaluationService.drain`), and exits cleanly.
 
 Front-ends::
 
     python -m repro.serve --qrel tests/fixtures/conformance.qrel -m map
-    python -m repro.serve --tcp 127.0.0.1:9090 ...
+    python -m repro.serve --tcp 127.0.0.1:9090 --auth-token s3cret ...
 
 The default front-end reads stdin and writes stdout (one process per
 client); ``--tcp`` serves any number of concurrent connections, and requests
 from DIFFERENT connections coalesce into the same backend batches.  The
 ``-m`` / ``-l`` measure flags are shared with the one-shot CLI
-(:func:`repro.cli.add_measure_args`).
+(:func:`repro.cli.add_measure_args`).  ``repro.client`` is the library
+speaking this protocol (persistent connections, pipelining, retry).
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import hmac
 import json
+import signal
 import sys
 from typing import Optional, Sequence, Tuple
 
 from repro.serve.service import EvaluationService, ServeResult
+from repro.serve.wire import (DEFAULT_FRAME_LIMIT, OversizedFrame,
+                              ProtocolError, TokenBucket, iter_frames)
+
+#: required fields per operation, checked before dispatch so the client
+#: sees "op 'evaluate' requires field 'qrel_id'" instead of a bare KeyError
+REQUIRED_FIELDS = {
+    "register_qrel": ("qrel_id", "qrel"),
+    "register_run": ("qrel_id", "run_id"),
+    "evaluate": ("qrel_id",),
+    "drop_qrel": ("qrel_id",),
+    "stats": (),
+    "ping": (),
+    "auth": ("token",),
+}
+
+
+def _error(rid, message: str, code: str) -> dict:
+    return {"id": rid, "ok": False, "error": message, "code": code}
+
+
+def _exc_message(exc: BaseException) -> str:
+    # KeyError('x') stringifies as "'x'" — unwrap single string args
+    if len(exc.args) == 1 and isinstance(exc.args[0], str):
+        return exc.args[0]
+    return str(exc)
+
+
+def _check_request(req: dict) -> str:
+    """Validate op + required fields; returns the op.  Raises ProtocolError."""
+    op = req.get("op")
+    if op not in REQUIRED_FIELDS:
+        raise ProtocolError(
+            f"unknown op {op!r} (expected one of "
+            f"{'/'.join(sorted(REQUIRED_FIELDS))})", code="unknown_op")
+    for field in REQUIRED_FIELDS[op]:
+        if field not in req:
+            raise ProtocolError(
+                f"op {op!r} requires field {field!r}", code="missing_field")
+    return op
+
+
+def _relevance_level(req: dict):
+    """The protocol's one typing rule for ``relevance_level``: a number.
+
+    Ints and floats both pass straight through — the single int→float
+    conversion lives in :class:`repro.core.RelevanceEvaluator`, exactly as
+    for the CLI's ``-l`` flag (no lossy ``int()`` truncation here).
+    """
+    level = req.get("relevance_level", 1)
+    if isinstance(level, bool) or not isinstance(level, (int, float)):
+        raise ProtocolError(
+            "op 'register_qrel' field 'relevance_level' must be a number "
+            f"like the CLI's -l flag, got {type(level).__name__}: {level!r}",
+            code="invalid")
+    return level
 
 
 async def handle_request(service: EvaluationService, req: dict) -> dict:
     """Execute one decoded protocol request; never raises."""
     rid = req.get("id")
     try:
-        op = req.get("op")
+        op = _check_request(req)
         if op == "register_qrel":
             result = service.register_qrel(
                 req["qrel_id"], req["qrel"], measures=req.get("measures"),
-                relevance_level=int(req.get("relevance_level", 1)),
+                relevance_level=_relevance_level(req),
                 backend=req.get("backend"))
         elif op == "register_run":
             result = service.register_run(
@@ -66,33 +140,58 @@ async def handle_request(service: EvaluationService, req: dict) -> dict:
             result = {"dropped": service.drop_qrel(req["qrel_id"])}
         elif op == "stats":
             result = service.stats()
-        elif op == "ping":
+        elif op == "auth":
+            # an unauthenticated front-end accepts any token (no-op), so
+            # clients configured with a token work against open servers;
+            # the TCP front-end intercepts this op when a token is set
+            result = {"authenticated": True}
+        else:  # op == "ping"
             result = "pong"
-        else:
-            raise ValueError(f"unknown op {op!r}")
+    except ProtocolError as exc:
+        return _error(rid, str(exc), exc.code)
+    except KeyError as exc:  # unknown qrel_id / run_ref from the service
+        return _error(rid, _exc_message(exc), "not_found")
+    except (TypeError, ValueError) as exc:
+        return _error(rid, _exc_message(exc), "invalid")
     except Exception as exc:  # noqa: BLE001 — protocol errors go to the client
-        return {"id": rid, "ok": False,
-                "error": f"{type(exc).__name__}: {exc}"}
+        return _error(rid, f"{type(exc).__name__}: {exc}", "internal")
     return {"id": rid, "ok": True, "result": result}
 
 
-async def handle_line(service: EvaluationService, line: str) -> str:
-    """One protocol line in, one JSON response line out."""
+def _decode(line: str) -> Tuple[Optional[dict], Optional[dict]]:
+    """Parse one request line → ``(request, None)`` or ``(None, error)``."""
     try:
         req = json.loads(line)
         if not isinstance(req, dict):
             raise ValueError("request must be a JSON object")
     except ValueError as exc:
-        return json.dumps({"id": None, "ok": False,
-                           "error": f"bad request line: {exc}"})
+        return None, _error(None, f"bad request line: {exc}", "bad_request")
+    return req, None
+
+
+async def handle_line(service: EvaluationService, line: str) -> str:
+    """One protocol line in, one JSON response line out."""
+    req, err = _decode(line)
+    if err is not None:
+        return json.dumps(err)
     return json.dumps(await handle_request(service, req))
+
+
+def _oversized_error(frame: OversizedFrame) -> dict:
+    return _error(
+        None,
+        f"request line exceeds the frame limit ({frame.limit} bytes); "
+        f"raise --max-frame-mb or split the payload", "frame_too_large")
 
 
 # -- TCP ---------------------------------------------------------------------
 
 
 async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
-                    port: int = 0):
+                    port: int = 0, *, limit: int = DEFAULT_FRAME_LIMIT,
+                    auth_token: Optional[str] = None,
+                    rate_limit: Optional[float] = None,
+                    burst: Optional[float] = None):
     """Start the TCP front-end; returns the ``asyncio`` server object.
 
     Each connection is a JSON-lines stream.  Every request line becomes its
@@ -100,19 +199,26 @@ async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
     concurrent requests (same or different connections) coalesce in the
     service's micro-batcher.  Pass ``port=0`` for an ephemeral port
     (``server.sockets[0].getsockname()[1]``).
+
+    ``limit`` bounds the request line length (default 64 MiB; oversized
+    lines get a ``frame_too_large`` error response, not a dead socket).
+    ``auth_token`` requires each connection to send ``{"op": "auth",
+    "token": ...}`` before anything else; ``rate_limit``/``burst`` give
+    each connection a token bucket whose exhaustion *delays* reads.
     """
 
     async def client(reader: asyncio.StreamReader,
                      writer: asyncio.StreamWriter) -> None:
         wlock = asyncio.Lock()
         tasks = set()
+        authed = auth_token is None
+        bucket = (TokenBucket(rate_limit, burst)
+                  if rate_limit is not None else None)
 
-        async def one(raw: bytes) -> None:
-            resp = await handle_line(service, raw.decode("utf-8",
-                                                         "replace"))
+        async def send(payload: dict) -> None:
             try:
                 async with wlock:
-                    writer.write(resp.encode() + b"\n")
+                    writer.write(json.dumps(payload).encode() + b"\n")
                     await writer.drain()
             except (ConnectionError, OSError):
                 # client went away before reading its response — the
@@ -120,45 +226,94 @@ async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
                 # (an unretrieved task exception would just spam stderr)
                 pass
 
+        async def one(raw: bytes) -> None:
+            nonlocal authed
+            req, err = _decode(raw.decode("utf-8", "replace"))
+            if err is not None:
+                await send(err)
+                return
+            if auth_token is not None and req.get("op") == "auth":
+                if "token" not in req:  # same code as _check_request gives
+                    await send(_error(req.get("id"),
+                                      "op 'auth' requires field 'token'",
+                                      "missing_field"))
+                    return
+                ok = hmac.compare_digest(str(req["token"]), auth_token)
+                # `authed` flips BEFORE this task's first await: requests
+                # pipelined right behind a good auth line see it set.
+                authed = authed or ok
+                await send({"id": req.get("id"), "ok": True,
+                            "result": {"authenticated": True}} if ok else
+                           _error(req.get("id"), "bad auth token",
+                                  "bad_auth"))
+                return
+            if not authed:
+                await send(_error(
+                    req.get("id"),
+                    "authentication required: send "
+                    '{"op": "auth", "token": ...} first', "auth_required"))
+                return
+            await send(await handle_request(service, req))
+
         try:
-            while True:
-                raw = await reader.readline()
-                if not raw:
-                    break
+            async for raw in iter_frames(reader, limit):
+                if isinstance(raw, OversizedFrame):
+                    await send(_oversized_error(raw))
+                    continue
                 if not raw.strip():
                     continue
+                if bucket is not None:
+                    # throttle by delaying the READ of further requests:
+                    # pipelined floods smear out at `rate_limit` req/s
+                    await bucket.acquire()
                 t = asyncio.get_running_loop().create_task(one(raw))
                 tasks.add(t)
                 t.add_done_callback(tasks.discard)
+        except (ConnectionError, OSError, asyncio.IncompleteReadError):
+            pass  # peer vanished mid-line; no one left to tell
+        except asyncio.CancelledError:
+            raise
+        except Exception as exc:  # noqa: BLE001 — reader bug: answer, then close
+            await send(_error(None,
+                              f"connection error: {type(exc).__name__}: "
+                              f"{exc}", "internal"))
+        finally:
             if tasks:
                 await asyncio.gather(*tasks, return_exceptions=True)
-        finally:
             writer.close()
             try:
                 await writer.wait_closed()
             except (ConnectionError, OSError):
                 pass
 
-    return await asyncio.start_server(client, host, port)
+    return await asyncio.start_server(client, host, port, limit=limit)
 
 
 # -- stdio -------------------------------------------------------------------
 
 
 async def serve_stdio(service: EvaluationService, in_stream=None,
-                      out_stream=None) -> None:
-    """JSON-lines over stdin/stdout until EOF (one process per client)."""
+                      out_stream=None, *,
+                      limit: int = DEFAULT_FRAME_LIMIT) -> None:
+    """JSON-lines over stdin/stdout until EOF (one process per client).
+
+    stdio is a trusted local transport: no auth, no rate limit.  ``limit``
+    still applies (oversized lines answer ``frame_too_large``) so both
+    front-ends enforce the same frame contract.
+    """
     loop = asyncio.get_running_loop()
     in_stream = sys.stdin if in_stream is None else in_stream
     out_stream = sys.stdout if out_stream is None else out_stream
     wlock = asyncio.Lock()
     tasks = set()
 
-    async def one(line: str) -> None:
-        resp = await handle_line(service, line)
+    async def emit(resp: str) -> None:
         async with wlock:
             out_stream.write(resp + "\n")
             out_stream.flush()
+
+    async def one(line: str) -> None:
+        await emit(await handle_line(service, line))
 
     while True:
         line = await loop.run_in_executor(None, in_stream.readline)
@@ -166,11 +321,19 @@ async def serve_stdio(service: EvaluationService, in_stream=None,
             break
         if not line.strip():
             continue
+        body = line[:-1] if line.endswith("\n") else line
+        # the limit is in BYTES, matching the TCP framing exactly
+        nbytes = len(body) if body.isascii() else len(body.encode("utf-8"))
+        if nbytes > limit:
+            await emit(json.dumps(_oversized_error(
+                OversizedFrame(nbytes, limit))))
+            continue
         t = loop.create_task(one(line))
         tasks.add(t)
         t.add_done_callback(tasks.discard)
     if tasks:
         await asyncio.gather(*tasks, return_exceptions=True)
+    await service.drain()
 
 
 # -- entry point -------------------------------------------------------------
@@ -226,20 +389,60 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="LRU capacity for resident collections")
     ap.add_argument("--max-pending", type=int, default=256, metavar="N",
                     help="in-flight request cap (backpressure)")
+    ap.add_argument("--max-frame-mb", type=float,
+                    default=DEFAULT_FRAME_LIMIT / 2**20, metavar="MB",
+                    help="request line length limit in MiB (default 64; "
+                         "oversized lines get an error response)")
+    ap.add_argument("--auth-token", default=None, metavar="TOKEN",
+                    help="require TCP connections to authenticate via "
+                         "{'op': 'auth', 'token': TOKEN} before anything "
+                         "else (stdio is trusted)")
+    ap.add_argument("--rate-limit", type=float, default=None, metavar="N",
+                    help="per-connection token-bucket budget in requests/s "
+                         "(TCP only; excess requests are delayed)")
+    ap.add_argument("--burst", type=float, default=None, metavar="N",
+                    help="token-bucket burst capacity "
+                         "(default: max(1, rate))")
     args = ap.parse_args(argv)
+    limit = max(1, int(args.max_frame_mb * 2**20))
 
     async def run() -> None:
         service = build_service(args)
         if args.tcp:
             host, port = _parse_hostport(args.tcp)
-            server = await serve_tcp(service, host, port)
+            server = await serve_tcp(
+                service, host, port, limit=limit,
+                auth_token=args.auth_token, rate_limit=args.rate_limit,
+                burst=args.burst)
             addr = server.sockets[0].getsockname()
             print(f"serving on {addr[0]}:{addr[1]}", file=sys.stderr,
                   flush=True)
-            async with server:
-                await server.serve_forever()
+            stop = asyncio.Event()
+            loop = asyncio.get_running_loop()
+            for sig in (signal.SIGINT, signal.SIGTERM):
+                try:
+                    loop.add_signal_handler(sig, stop.set)
+                except (NotImplementedError, RuntimeError):
+                    pass  # platform without signal handlers (Windows loop)
+            try:
+                await stop.wait()
+            finally:
+                # graceful drain: stop accepting, give request lines already
+                # read a beat to enter the service, finish in-flight batches
+                server.close()
+                await server.wait_closed()
+                await asyncio.sleep(0.05)
+                await service.drain()
+                # then let handler tasks finish WRITING those responses
+                # (3.10's wait_closed doesn't wait for handlers; bounded,
+                # since connected-but-idle clients keep handlers alive)
+                others = [t for t in asyncio.all_tasks()
+                          if t is not asyncio.current_task()]
+                if others:
+                    await asyncio.wait(others, timeout=1.0)
+                print("drained; exiting", file=sys.stderr, flush=True)
         else:
-            await serve_stdio(service)
+            await serve_stdio(service, limit=limit)
 
     try:
         asyncio.run(run())

@@ -108,20 +108,24 @@ class EvaluationService:
                                      max_batch=max_batch)
         self.max_pending = int(max_pending)
         self._sem = asyncio.Semaphore(self.max_pending)
+        self._active = 0  # evaluate() coroutines between entry and exit
         self._stats = {"requests": 0, "backend_calls": 0, "in_flight": 0,
                        "peak_in_flight": 0}
 
     # -- registration ---------------------------------------------------------
 
     def register_qrel(self, qrel_id: str, qrel, measures=None,
-                      relevance_level: int = 1,
+                      relevance_level: float = 1,
                       backend: Optional[str] = None) -> Dict[str, object]:
         """Intern a qrel into a cached evaluator; returns collection info.
 
-        ``measures`` defaults to every supported family.  ``backend``
-        overrides the service default for this collection
-        (``auto``/``single``/``sharded``).  Re-registering a ``qrel_id``
-        replaces the collection (and drops its registered runs).
+        ``measures`` defaults to every supported family.
+        ``relevance_level`` accepts int or float exactly like the CLI's
+        ``-l`` flag — the single conversion to float happens inside
+        :class:`RelevanceEvaluator`.  ``backend`` overrides the service
+        default for this collection (``auto``/``single``/``sharded``).
+        Re-registering a ``qrel_id`` replaces the collection (and drops its
+        registered runs).
         """
         from repro.core import supported_measures
 
@@ -131,6 +135,7 @@ class EvaluationService:
         self._collections.put(qrel_id, _Collection(qrel_id, ev, resolved))
         return {"qrel_id": qrel_id, "n_queries": len(ev._qrel),
                 "vocab_size": int(len(ev.vocab)), "backend": resolved,
+                "relevance_level": ev.relevance_level,
                 "measure_keys": list(ev.measure_keys)}
 
     def register_run(self, qrel_id: str, run_id: str, run=None,
@@ -168,6 +173,15 @@ class EvaluationService:
         """
         col = self._require(qrel_id)
         self._stats["requests"] += 1  # counted at arrival, before any await
+        self._active += 1
+        try:
+            return await self._evaluate(col, qrel_id, run, tokens, run_ref,
+                                        scores)
+        finally:
+            self._active -= 1
+
+    async def _evaluate(self, col: "_Collection", qrel_id: str, run, tokens,
+                        run_ref, scores) -> ServeResult:
         if run is not None:
             # Dict-run tokenization (~100ms at Q=1000×D=1000) runs on an
             # executor thread so it never stalls the event loop — other
@@ -214,6 +228,18 @@ class EvaluationService:
             for i, res in zip(idxs, packed):
                 out[i] = res
         return out
+
+    async def drain(self) -> None:
+        """Resolve once every accepted request has been answered.
+
+        "Accepted" spans the whole ``evaluate`` lifecycle — tokenization on
+        an executor thread, waiting for a backpressure slot, sitting in a
+        coalescing window, and the backend flush itself.  Front-ends call
+        this on shutdown so in-flight batches complete before the process
+        exits; it does NOT block new submissions, so stop accepting first.
+        """
+        while self._active or not self._batcher.idle():
+            await asyncio.sleep(0.002)
 
     # -- plumbing -------------------------------------------------------------
 

@@ -1,0 +1,311 @@
+"""Client-library acceptance tests (ISSUE 4).
+
+The contract proven here:
+
+* a 100 KB+ ``register_qrel`` + evaluate round-trip over TCP returns
+  results bit-identical to ``RelevanceEvaluator.evaluate`` — the payload
+  size that crashed the seed's 64 KiB ``readline`` limit;
+* N pipelined ``AsyncEvalClient`` requests coalesce into fewer backend
+  calls (asserted on the service micro-batcher's ``flushes`` counter);
+* an authenticated server answers a wrong-token client with an error
+  *response* on a live socket, never a dead connection;
+* ``benchmarks/bench_client.py`` runs and reports throughput + p50/p99 at
+  >= 2 pipeline depths.
+
+Socket endpoints come from :class:`repro.serve.testing.ServerThread`
+(in-process loopback — fast); only the subprocess suite is ``slow``.
+"""
+
+import asyncio
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.client import (AsyncEvalClient, AuthError, ClientError,
+                          ConnectionLostError, EvalClient, IDEMPOTENT_OPS)
+from repro.core import RelevanceEvaluator, aggregate_results
+from repro.data.synthetic_ir import synthesize_run
+from repro.serve.testing import ServerThread
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+QREL_PATH = os.path.join(FIXTURES, "conformance.qrel")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+MEASURES = ("map", "ndcg", "recip_rank", "P")
+
+
+def _big_collection(n_queries=120, n_docs=32):
+    """A qrel/run pair whose JSON serialization tops 100 KB."""
+    qrel, run = {}, {}
+    rng = np.random.default_rng(11)
+    for q in range(n_queries):
+        qid = f"query-{q:05d}"
+        docs = [f"document-{q:05d}-{d:05d}-padpadpad" for d in range(n_docs)]
+        qrel[qid] = {doc: int(rng.integers(0, 3)) for doc in docs}
+        run[qid] = {doc: float(rng.normal()) for doc in docs}
+    return qrel, run
+
+
+# -- acceptance: the 64 KiB crash is gone ------------------------------------
+
+
+def test_large_payload_roundtrip_bit_identical():
+    """>100 KB register_qrel + evaluate over TCP == in-process evaluate."""
+    qrel, run = _big_collection()
+    payload = json.dumps({"op": "register_qrel", "qrel_id": "big",
+                          "qrel": qrel}).encode()
+    assert len(payload) > 100_000  # the seed crashed beyond 64 KiB (2**16)
+
+    with ServerThread() as srv:
+        with EvalClient(srv.host, srv.port) as client:
+            info = client.register_qrel("big", qrel, MEASURES)
+            assert info["n_queries"] == len(qrel)
+            res = client.evaluate("big", run=run)
+
+    want = RelevanceEvaluator(qrel, MEASURES).evaluate(run)
+    assert res.per_query == want  # bit-identical floats, all queries
+    assert res.aggregates == aggregate_results(want)
+
+
+def test_legacy_limit_now_answers_instead_of_crashing():
+    """With the OLD 64 KiB limit configured, an oversized register_qrel
+    gets a frame_too_large *response* — not the seed's dead connection."""
+    qrel, run = _big_collection()
+
+    async def main(port):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write(json.dumps({"op": "register_qrel", "id": 1,
+                                 "qrel_id": "big", "qrel": qrel}).encode()
+                     + b"\n")
+        writer.write(b'{"op": "ping", "id": 2}\n')
+        await writer.drain()
+        first = json.loads(await reader.readline())
+        second = json.loads(await reader.readline())
+        writer.close()
+        await writer.wait_closed()
+        return first, second
+
+    with ServerThread(limit=2**16) as srv:
+        first, second = asyncio.run(main(srv.port))
+    assert not first["ok"] and first["code"] == "frame_too_large"
+    assert second["ok"] and second["result"] == "pong"  # connection alive
+
+
+def test_client_rejects_request_over_frame_limit_locally():
+    qrel, _ = _big_collection()
+    with ServerThread() as srv:
+        with EvalClient(srv.host, srv.port, frame_limit=2**16) as client:
+            assert client.ping() == "pong"
+            with pytest.raises(ClientError, match="frame limit"):
+                client.register_qrel("big", qrel)
+            assert client.ping() == "pong"  # stream not poisoned
+
+
+# -- acceptance: pipelining coalesces ----------------------------------------
+
+
+def test_pipelined_requests_coalesce_fewer_flushes():
+    run, qrel = synthesize_run(n_queries=24, n_docs=16, seed=7)
+    ev = RelevanceEvaluator(qrel, ("map", "recip_rank"))
+    buf = ev.tokenize_run(run)
+    rng = np.random.default_rng(3)
+    n = 8
+    score_sets = [rng.normal(size=buf.qidx.shape[0]).astype(np.float32)
+                  for _ in range(n)]
+
+    with ServerThread(service_kw=dict(window=0.05,
+                                      backend="single")) as srv:
+        srv.register_qrel("c", qrel, ("map", "recip_rank"))
+        srv.register_run("c", "bm25", run=run)
+        flushes_before = srv.stats()["flushes"]
+
+        async def main():
+            async with await AsyncEvalClient.connect(srv.host,
+                                                     srv.port) as client:
+                return await client.evaluate_many(
+                    "c", run_ref="bm25", scores_list=score_sets)
+
+        results = asyncio.run(main())
+        stats = srv.stats()
+
+    flushed = stats["flushes"] - flushes_before
+    assert 0 < flushed < n  # N pipelined requests -> fewer batcher flushes
+    assert stats["backend_calls"] < n
+    for s, res in zip(score_sets, results):
+        assert res.per_query == ev.evaluate_buffer(buf, scores=s)
+
+
+def test_sync_submit_pipelines_too():
+    run, qrel = synthesize_run(n_queries=12, n_docs=8, seed=5)
+    with ServerThread(service_kw=dict(window=0.05,
+                                      backend="single")) as srv:
+        srv.register_qrel("c", qrel, ("map",))
+        with EvalClient(srv.host, srv.port) as client:
+            info = client.register_run("c", "r", run=run)
+            scores = np.linspace(0.0, 1.0,
+                                 info["n_docs"]).astype(np.float32)
+            futures = [client.submit("c", run_ref="r", scores=scores)
+                       for _ in range(4)]
+            results = [f.result(60) for f in futures]
+        stats = srv.stats()
+    assert stats["backend_calls"] < 4
+    assert all(r.per_query == results[0].per_query for r in results)
+
+
+# -- acceptance: auth --------------------------------------------------------
+
+
+def test_wrong_token_gets_error_response_not_dead_socket():
+    async def main(port):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+
+        async def rpc(obj):
+            writer.write(json.dumps(obj).encode() + b"\n")
+            await writer.drain()
+            return json.loads(await reader.readline())
+
+        tokenless = await rpc({"op": "auth", "id": 0})
+        denied = await rpc({"op": "auth", "id": 1, "token": "wrong"})
+        unauth = await rpc({"op": "ping", "id": 2})
+        granted = await rpc({"op": "auth", "id": 3, "token": "s3cret"})
+        pong = await rpc({"op": "ping", "id": 4})
+        writer.close()
+        await writer.wait_closed()
+        return tokenless, denied, unauth, granted, pong
+
+    with ServerThread(auth_token="s3cret") as srv:
+        tokenless, denied, unauth, granted, pong = asyncio.run(
+            main(srv.port))
+    # wrong token: an error RESPONSE on a connection that stays usable
+    assert tokenless["code"] == "missing_field"  # same code as open servers
+    assert not denied["ok"] and denied["code"] == "bad_auth"
+    assert not unauth["ok"] and unauth["code"] == "auth_required"
+    assert granted["ok"] and granted["result"]["authenticated"]
+    assert pong["ok"] and pong["result"] == "pong"
+
+
+def test_client_auth_lifecycle():
+    qrel = {"q1": {"d1": 1}}
+    with ServerThread(auth_token="s3cret") as srv:
+        with pytest.raises(AuthError):
+            EvalClient(srv.host, srv.port, token="wrong")
+        with pytest.raises(AuthError):  # no token at all
+            with EvalClient(srv.host, srv.port) as c:
+                c.ping()
+        with EvalClient(srv.host, srv.port, token="s3cret") as client:
+            client.register_qrel("web", qrel, ("map",))
+            res = client.evaluate("web", run={"q1": {"d1": 1.0}})
+            assert res.per_query["q1"]["map"] == 1.0
+
+
+# -- reconnect-with-retry ----------------------------------------------------
+
+
+def test_reconnect_retries_idempotent_requests():
+    run, qrel = synthesize_run(n_queries=6, n_docs=4, seed=1)
+    want = RelevanceEvaluator(qrel, ("map",)).evaluate(run)
+
+    with ServerThread() as srv:
+
+        async def main():
+            client = await AsyncEvalClient.connect(srv.host, srv.port,
+                                                   retries=2, backoff=0.01)
+            await client.register_qrel("c", qrel, ["map"])
+            # sever the transport under the client's feet; the next
+            # (idempotent) request must reconnect and retry transparently
+            client._writer.close()
+            res = await client.evaluate("c", run=run)
+            stats = dict(client.transport_stats)
+            await client.aclose()
+            return res, stats
+
+        res, stats = asyncio.run(main())
+    assert res.per_query == want
+    assert stats["reconnects"] == 1
+    assert "drop_qrel" not in IDEMPOTENT_OPS  # result is not idempotent
+
+
+def test_connection_refused_surfaces_after_retries():
+    async def main():
+        client = AsyncEvalClient("127.0.0.1", 1, retries=1, backoff=0.01)
+        with pytest.raises((ConnectionLostError, OSError)):
+            await client.ping()
+        await client.aclose()
+
+    asyncio.run(main())
+
+
+# -- protocol-level helpers through the client -------------------------------
+
+
+def test_session_api_mirror_roundtrip():
+    run, qrel = synthesize_run(n_queries=8, n_docs=6, seed=2)
+    ev = RelevanceEvaluator(qrel, ("map", "ndcg"))
+    with ServerThread() as srv:
+        with EvalClient(srv.host, srv.port) as client:
+            assert client.ping() == "pong"
+            info = client.register_qrel("c", qrel, ["map", "ndcg"],
+                                        relevance_level=1)
+            assert info["relevance_level"] == 1.0
+            res = client.evaluate("c", run=run)
+            assert res.per_query == ev.evaluate(run)
+            stats = client.stats()
+            assert stats["requests"] == 1
+            assert client.drop_qrel("c") is True
+            assert client.drop_qrel("c") is False
+            with pytest.raises(Exception, match="unknown qrel_id"):
+                client.evaluate("c", run=run)
+
+
+def test_evaluate_many_validation():
+    with ServerThread() as srv:
+        with EvalClient(srv.host, srv.port) as client:
+            with pytest.raises(ValueError, match="exactly one"):
+                client.evaluate_many("c")
+
+
+# -- acceptance: the client benchmark runs -----------------------------------
+
+def test_bench_client_reports_two_pipeline_depths():
+    from benchmarks import bench_client
+
+    rows = bench_client.run(full=False)
+    client_rows = [r for r in rows if r["mode"] == "client"]
+    assert len({r["depth"] for r in client_rows}) >= 2
+    for row in rows:
+        assert row["runs_per_s"] > 0
+        assert 0 <= row["p50_ms"] <= row["p99_ms"]
+    assert any(r["mode"] == "raw_socket" for r in rows)
+
+
+# -- stdio transport (subprocess: slow) --------------------------------------
+
+
+@pytest.mark.slow
+def test_spawn_stdio_subprocess_with_large_payload():
+    qrel, run = _big_collection(n_queries=48, n_docs=24)
+    orig = os.environ.get("PYTHONPATH")
+    # the spawned subprocess must be able to import repro
+    os.environ["PYTHONPATH"] = SRC + ((os.pathsep + orig) if orig else "")
+    try:
+        with EvalClient.spawn_stdio(
+                [sys.executable, "-m", "repro.serve", "--qrel", QREL_PATH,
+                 "-m", "map", "--window-ms", "1"]) as client:
+            assert client.ping() == "pong"
+            # the pre-registered default collection from --qrel works
+            res = client.evaluate("default",
+                                  run={"q1": {"APPLE": 2.0, "BANANA": 1.0}})
+            assert res.per_query["q1"]["map"] > 0
+            # and a fresh >64 KiB registration round-trips bit-identically
+            client.register_qrel("big", qrel, ("map",))
+            res = client.evaluate("big", run=run)
+        want = RelevanceEvaluator(qrel, ("map",)).evaluate(run)
+        assert res.per_query == want
+    finally:
+        if orig is None:
+            os.environ.pop("PYTHONPATH", None)
+        else:
+            os.environ["PYTHONPATH"] = orig

@@ -211,6 +211,33 @@ def test_array_parse_path_conforms(fixture_results):
                 fixture_results[qid][key], abs=1e-6), (qid, key)
 
 
+def test_unjudged_queries_skipped_trec_eval_style(fixture_results):
+    """Queries in the run but absent from the qrels are SKIPPED, exactly as
+    trec_eval does — and the judged queries' values are untouched by the
+    extra traffic, bit-identically across the dict path, the RunBuffer
+    path, and the reference densifier."""
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    run["q_unjudged"] = {"APPLE": 3.0, "ZEBRA": 1.0}
+    run["q_also_unjudged"] = {"BANANA": 0.5}
+
+    ev = RelevanceEvaluator(qrel, supported_measures)
+    res_dict = ev.evaluate(run)
+    assert set(res_dict) == {"q1", "q2"}  # intersection semantics
+
+    buf = ev.tokenize_run(run)
+    assert len(buf) == 2  # unjudged queries never enter the buffer
+    res_buf = ev.evaluate_buffer(buf)
+    assert res_buf == res_dict  # bit-identical floats
+
+    ref = RelevanceEvaluator(qrel, supported_measures,
+                             densify="reference").evaluate(run)
+    assert ref == res_dict
+
+    # and the judged queries are exactly the clean-run values
+    assert res_dict == fixture_results
+
+
 def test_gm_map_hand_computed_reference():
     """Geometric-mean MAP against values computed entirely by hand.
 

@@ -40,6 +40,11 @@ def test_doc_code_blocks_run(path):
     "repro.serve.service",
     "repro.serve.cache",
     "repro.serve.batcher",
+    "repro.serve.wire",
+    "repro.serve.testing",
+    "repro.client",
+    "repro.client.aio",
+    "repro.client.sync",
 ])
 def test_docstring_examples(module_name):
     import importlib

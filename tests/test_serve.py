@@ -317,6 +317,34 @@ def test_protocol_handle_line_roundtrip(collection):
         assert got[qid]["map"] == pytest.approx(want[qid]["map"], abs=1e-9)
 
 
+def test_unjudged_queries_skipped_across_serve_roundtrip(collection):
+    """Run-only queries are skipped trec_eval-style, bit-identically across
+    the dict path, the RunBuffer path, and a serve round-trip."""
+    run, qrel = collection
+    noisy = {**run, "zz_unjudged": {"dA": 2.0, "dB": 1.0},
+             "zz_also": {"dC": 0.5}}
+    ev = RelevanceEvaluator(qrel, MEASURES)
+    want = ev.evaluate(noisy)
+    assert set(want) == set(qrel) & set(noisy)
+    assert "zz_unjudged" not in want and "zz_also" not in want
+    # dict path == RunBuffer path, bit-identical
+    assert ev.evaluate_buffer(ev.tokenize_run(noisy)) == want
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        reg = json.loads(await handle_line(svc, json.dumps(
+            {"op": "register_qrel", "id": 1, "qrel_id": "c", "qrel": qrel,
+             "measures": list(MEASURES)})))
+        assert reg["ok"], reg
+        return json.loads(await handle_line(svc, json.dumps(
+            {"op": "evaluate", "id": 2, "qrel_id": "c", "run": noisy})))
+
+    resp = asyncio.run(main())
+    assert resp["ok"], resp
+    # JSON round-trips floats exactly: the serve path is bit-identical too
+    assert resp["result"]["per_query"] == want
+
+
 # -- unit: cache + batcher ---------------------------------------------------
 
 
@@ -414,6 +442,47 @@ def test_tcp_frontend_coalesces_across_connections(collection):
         for qid in want[i]:
             assert got[qid]["map"] == pytest.approx(want[i][qid]["map"],
                                                     abs=1e-9)
+
+
+@pytest.mark.slow
+def test_tcp_large_qrel_regression(collection):
+    """ISSUE 4 repro: a >64 KiB register_qrel line used to raise
+    ``ValueError: Separator is found, but chunk is longer than limit`` in
+    the reader loop and kill the connection with an empty response.  At the
+    server's DEFAULT limit it must round-trip bit-identically."""
+    from repro.serve import serve_tcp
+
+    run, qrel = collection
+    # pad ids so the qrel line clears 64 KiB by a wide margin
+    big_qrel = {f"{qid}-{'x' * 220}": {f"{d}-{'y' * 220}": r
+                                      for d, r in docs.items()}
+                for qid, docs in qrel.items()}
+    big_run = {f"{qid}-{'x' * 220}": {f"{d}-{'y' * 220}": s
+                                     for d, s in docs.items()}
+               for qid, docs in run.items()}
+    line = json.dumps({"op": "register_qrel", "id": 1, "qrel_id": "big",
+                       "qrel": big_qrel, "measures": ["map", "ndcg"]})
+    assert len(line) > (1 << 16)
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        server = await serve_tcp(svc, "127.0.0.1", 0)  # default limit
+        port = server.sockets[0].getsockname()[1]
+        try:
+            reg, res = await _tcp_request("127.0.0.1", port, [
+                json.loads(line),
+                {"op": "evaluate", "id": 2, "qrel_id": "big",
+                 "run": big_run}])
+        finally:
+            server.close()
+            await server.wait_closed()
+        return reg, res
+
+    reg, res = asyncio.run(main())
+    assert reg["ok"], reg
+    assert res["ok"], res
+    want = RelevanceEvaluator(big_qrel, ("map", "ndcg")).evaluate(big_run)
+    assert res["result"]["per_query"] == want  # bit-identical
 
 
 @pytest.mark.slow
