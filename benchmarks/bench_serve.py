@@ -47,11 +47,11 @@ def _drive(n_queries: int, n_docs: int, requests: int,
                                 backend="single")
         svc.register_qrel("bench", qrel, ("map", "ndcg", "recip_rank"))
         svc.register_run("bench", "r", run=run)
-        # Warmup: compile the measure core at every padded geometry this
-        # level can produce.  Coalesced batches of k requests pad the query
-        # axis to a power-of-two bucket, so warming each power-of-two wave
-        # size up to `concurrency` covers every steady-state shape — the
-        # timed section then measures serving, not XLA compilation.
+        # Warmup: pre-compile the closed set of padded geometries.  Shape
+        # bucketing (repro.kernels.bucketing) guarantees any wave size maps
+        # onto one of log2(concurrency)+O(1) signature classes, so sweeping
+        # doubling wave sizes here is cheap and exhaustive — the timed
+        # section measures serving with a fully warm jit cache.
         wave = 1
         while True:
             await asyncio.gather(*(

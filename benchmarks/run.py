@@ -1,6 +1,6 @@
 """Benchmark driver — one section per paper table/figure plus system segments.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--list]
 
 Segments (repeat ``--only`` to pick several):
 
@@ -9,6 +9,10 @@ Segments (repeat ``--only`` to pick several):
 * ``densify``   — run→``EvalBatch`` conversion in isolation: seed per-query
   loop vs the vectorized flat pipeline (cold dict ingest) vs the
   pre-tokenized session path (``batch_from_buffer`` on a ``RunBuffer``).
+* ``kernels``   — kernel-layer roofline: fused-measures achieved vs peak
+  bytes/s, execution mode (``ops.INTERPRET``), autotuned ``block_q``, and
+  the compile-count accounting behind shape bucketing; see
+  ``bench_kernels``.
 * ``sharded``   — multi-device scaling of the sharded evaluation pipeline
   (``repro.distributed.sharded_evaluator``) over 1/2/4/8 host-platform
   devices; subprocess-per-device-count, see ``bench_sharded``.
@@ -31,35 +35,57 @@ import argparse
 import json
 import os
 
+#: Segment name -> "module.function" (resolved lazily in main(); keeping the
+#: registry import-free lets ``--list`` answer without loading jax, and gives
+#: the docs-drift test one authoritative name list to compare against).
+SEGMENTS = {
+    "rq1": "bench_rq1.run",
+    "rq2": "bench_rq2.run",
+    "densify": "bench_rq1.densify",
+    "kernels": "bench_kernels.run",
+    "sharded": "bench_sharded.run",
+    "serve": "bench_serve.run",
+    "client": "bench_client.run",
+    "qlearning": "bench_qlearning.run",
+    "batched": "bench_batched.run",
+}
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (20 reps, 10k queries)")
     ap.add_argument("--only", action="append", default=None,
-                    choices=("rq1", "rq2", "densify", "sharded", "serve",
-                             "client", "qlearning", "batched"),
+                    choices=tuple(SEGMENTS),
                     help="segment to run (repeatable; default: all): "
                          "rq1/rq2 = paper figures, densify = run->EvalBatch "
-                         "conversion paths, sharded = multi-device scaling, "
+                         "conversion paths, kernels = roofline + compile "
+                         "accounting, sharded = multi-device scaling, "
                          "serve = async service throughput/latency, "
                          "client = TCP client library end to end, "
                          "qlearning = RL demo, batched = dense batched eval")
+    ap.add_argument("--list", action="store_true",
+                    help="print the segment names (one per line) and exit")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_batched, bench_client, bench_qlearning, \
-        bench_rq1, bench_rq2, bench_serve, bench_sharded
+    if args.list:
+        for name in SEGMENTS:
+            print(name)
+        return
 
-    suites = {
-        "rq1": bench_rq1.run,
-        "rq2": bench_rq2.run,
-        "densify": bench_rq1.densify,
-        "sharded": bench_sharded.run,
-        "serve": bench_serve.run,
-        "client": bench_client.run,
-        "qlearning": bench_qlearning.run,
-        "batched": bench_batched.run,
+    from benchmarks import bench_batched, bench_client, bench_kernels, \
+        bench_qlearning, bench_rq1, bench_rq2, bench_serve, bench_sharded
+
+    modules = {
+        "bench_batched": bench_batched, "bench_client": bench_client,
+        "bench_kernels": bench_kernels, "bench_qlearning": bench_qlearning,
+        "bench_rq1": bench_rq1, "bench_rq2": bench_rq2,
+        "bench_serve": bench_serve, "bench_sharded": bench_sharded,
     }
+    suites = {}
+    for name, ref in SEGMENTS.items():
+        mod, fn = ref.split(".")
+        suites[name] = getattr(modules[mod], fn)
     selected = args.only or list(suites)
     results = {}
     for name in selected:
@@ -67,8 +93,19 @@ def main(argv=None) -> None:
         results[name] = suites[name](full=args.full)
 
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as fh:
-        json.dump(results, fh, indent=1)
+    # Merge into the existing record: a partial run (--only X) must refresh
+    # segment X without dropping every other segment's stored results.
+    path = "experiments/bench_results.json"
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                merged = json.load(fh)
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(results)
+    with open(path, "w") as fh:
+        json.dump(merged, fh, indent=1)
 
     print("\nname,us_per_call,derived")
     for row in results.get("rq1", []):
@@ -83,6 +120,15 @@ def main(argv=None) -> None:
         print(f"densify_q{row['n_queries']}_d{row['n_docs']},"
               f"{row['session_us']:.1f},"
               f"speedup={row['speedup_densify']:.2f}")
+    for row in results.get("kernels", []):
+        if row["segment"] == "fused_roofline":
+            print(f"kernels_fused_q{row['n_queries']}_d{row['n_docs']},"
+                  f"{row['us_per_call']:.1f},"
+                  f"bw_fraction={row['bw_fraction']:.6f}")
+        else:
+            print(f"kernels_bucketing_w{row['distinct_wave_sizes']},"
+                  f"{1e6 * row['elapsed_s'] / row['distinct_wave_sizes']:.1f},"
+                  f"compiles={row['compiles']}/{row['signature_bound']}")
     for row in results.get("sharded", []):
         sp = row.get("speedup_vs_1dev")
         sp_str = f"{sp:.2f}" if sp is not None else "nan"

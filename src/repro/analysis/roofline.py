@@ -26,6 +26,33 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
+VMEM_BYTES = 16 * 2**20  # on-chip vector memory per core (Pallas tile budget)
+
+
+def kernel_roofline(bytes_moved: float, seconds: float,
+                    flops: float = 0.0) -> Dict:
+    """Achieved-vs-peak terms for one measured kernel invocation.
+
+    The kernel-benchmark counterpart of :func:`analyze`: instead of HLO
+    cost estimates it takes *measured* wall time plus the analytic bytes
+    the kernel must move (its HBM traffic floor) and reports achieved
+    bandwidth against :data:`HBM_BW` — the axis the fused measure kernel
+    lives on (it is memory-bound by construction: one [Q, D] read, a
+    [Q, 64] write, O(D log D) VPU work in between).  Consumed by
+    ``benchmarks.bench_kernels`` and the ``--only kernels`` segment, and
+    by ``kernels.autotune`` for its VMEM occupancy model.
+    """
+    achieved_bw = bytes_moved / seconds if seconds > 0 else 0.0
+    achieved_flops = flops / seconds if seconds > 0 else 0.0
+    return {
+        "bytes_moved": bytes_moved,
+        "seconds": seconds,
+        "achieved_bytes_per_s": achieved_bw,
+        "peak_bytes_per_s": HBM_BW,
+        "bw_fraction": achieved_bw / HBM_BW,
+        "achieved_flops_per_s": achieved_flops,
+        "flops_fraction": achieved_flops / PEAK_FLOPS,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -62,16 +62,16 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import measures as M
+from repro.kernels import bucketing
 
 RunType = Mapping[str, Mapping[str, float]]
 QrelType = Mapping[str, Mapping[str, int]]
 
-
-def _bucket(n: int, minimum: int = 8) -> int:
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
+# Padding classes come from the shared bucketing module so every engine —
+# this evaluator, the sharded dispatch, the serve layer's coalesced waves —
+# agrees on ONE closed set of jit signatures (log2(max extent) + O(1)
+# classes per axis; see kernels/bucketing.py).
+_bucket = bucketing.bucket_docs
 
 
 class RunBuffer:
@@ -475,9 +475,7 @@ class RelevanceEvaluator:
         max_d = int(buf.counts.max()) if nq else 0
         jcounts = self._judged_counts[buf.gidx]
         max_j = int(jcounts.max()) if nq else 0
-        q_pad = _bucket(nq, 1)
-        if q_multiple > 1:
-            q_pad = ((q_pad + q_multiple - 1) // q_multiple) * q_multiple
+        q_pad = bucketing.bucket_queries(nq, multiple=q_multiple)
         return M.batch_from_flat(
             qidx=buf.qidx, col=buf.col, scores=buf.scores,
             tiebreak=buf.tiebreak, rel=buf.rel, judged=buf.judged,

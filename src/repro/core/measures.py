@@ -401,6 +401,11 @@ def compute_measures(
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def compute_measures_jit(batch, measures, relevance_level=1.0):
+    # Lazy import: repro.kernels pulls in this module at its own import time.
+    # bucketing itself is dependency-free, so the in-body import is cheap and
+    # cycle-safe; the call runs at trace time only (once per signature).
+    from repro.kernels import bucketing
+    bucketing.record_trace("measure_core")
     return compute_measures(batch, measures, relevance_level)
 
 

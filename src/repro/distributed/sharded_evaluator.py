@@ -55,7 +55,7 @@ from repro.core import measures as M
 from repro.core import streaming
 from repro.core.evaluator import concat_run_buffers
 from repro.distributed import shard_map
-from repro.kernels import ops
+from repro.kernels import bucketing, ops
 
 
 class ShardedResult(NamedTuple):
@@ -101,8 +101,13 @@ class ShardedEvaluator:
     measure set, and the relevance level, so sharded results are directly
     comparable to its single-device ``evaluate``.
 
-    ``interpret`` forwards to the Pallas kernel (default: the module-wide
-    ``kernels.ops.INTERPRET``, True on CPU-only hosts).
+    ``interpret`` forwards to the Pallas kernel.  The default SNAPSHOTS the
+    module-wide ``kernels.ops.INTERPRET`` (backend-resolved: compiled on
+    TPU, interpret elsewhere) at *construction* time — the value is baked
+    into the compiled dispatch closure, so flipping ``ops.INTERPRET``
+    afterwards does not affect an existing instance.  Build a new
+    ``ShardedEvaluator`` (or pass ``interpret=`` explicitly) to change
+    mode; see the ``kernels.ops`` docstring for the full precedence rules.
     """
 
     def __init__(self, evaluator, mesh=None, interpret: Optional[bool] = None):
@@ -150,6 +155,7 @@ class ShardedEvaluator:
         def local_eval(batch: M.EvalBatch):
             # One shard: rank locally, one fused VMEM pass for all standard
             # measures, reference core for the remainder.
+            bucketing.record_trace("sharded_dispatch")  # once per signature
             s = M.sort_batch(batch, level)
             scal = ops.make_scalars(batch.n_rel, batch.n_judged_nonrel,
                                     batch.ideal_rel)

@@ -1,0 +1,71 @@
+"""Roofline-driven ``block_q`` selection for the fused measure kernel.
+
+The fused kernel (``kernels/fused_measures.py``) tiles the query axis:
+each grid step holds a ``[block_q, D]`` relevance/judged tile plus its
+cumulative-sum temporaries in VMEM.  The right ``block_q`` is a pure
+occupancy question — the largest tile whose working set still fits the
+on-chip budget — so it is derived from the same device model the roofline
+analysis uses (``repro.analysis.roofline``: :data:`~repro.analysis.roofline.VMEM_BYTES`,
+peak HBM bandwidth) rather than hand-tuned per call site:
+
+* bigger ``block_q`` → fewer grid steps, better amortization of the
+  per-step DMA latency, larger sequential HBM reads (the kernel is
+  memory-bound — see ``kernels_roofline`` in ``--only kernels``);
+* too big → the live tiles (two inputs, the scalar block, the output
+  block, and ~2 cumsum temporaries at scan peak) spill out of VMEM and
+  the compiler serializes.
+
+``fused_measures(block_q=None)`` and ``ShardedEvaluator`` consult
+:func:`block_q_for`; passing an explicit ``block_q`` still overrides it
+everywhere.  The choice is a deterministic function of shape, so it never
+adds compiled signatures beyond the bucketed shape classes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+from repro.analysis import roofline
+
+#: f32 [block_q, D] tiles live simultaneously at the scan's peak:
+#: rel + judged inputs, ~2 shifted-add cumsum temporaries, and the
+#: (lane-padded) output block counted as one D-wide tile equivalent.
+LIVE_TILES = 5
+
+#: block_q search range: powers of two; 8 sublanes is the floor one VPU
+#: tile occupies, 128 bounds padding waste for small query counts.
+MIN_BLOCK_Q = 8
+MAX_BLOCK_Q = 128
+
+#: leave half of VMEM to the compiler (double-buffered DMA, spills).
+VMEM_HEADROOM = 0.5
+
+
+@functools.lru_cache(maxsize=None)
+def block_q_for(q: int, d: int, vmem_bytes: Optional[int] = None) -> int:
+    """The query-tile height for a ``[q, d]`` fused-measures problem.
+
+    Largest power of two in ``[MIN_BLOCK_Q, MAX_BLOCK_Q]`` whose
+    ``LIVE_TILES`` resident ``[block_q, d]`` f32 tiles fit the VMEM
+    budget, clamped down so one block never exceeds the (bucketed) query
+    extent by more than the mandatory padding block.  Deterministic and
+    memoized — the same shape always tunes to the same kernel.
+
+    >>> block_q_for(1024, 64)
+    128
+    >>> block_q_for(1024, 1 << 16) < block_q_for(1024, 1 << 10)
+    True
+    >>> block_q_for(4, 64)
+    8
+    """
+    budget = (roofline.VMEM_BYTES if vmem_bytes is None else vmem_bytes)
+    budget *= VMEM_HEADROOM
+    bq = MAX_BLOCK_Q
+    while bq > MIN_BLOCK_Q and LIVE_TILES * bq * max(d, 1) * 4 > budget:
+        bq //= 2
+    # Don't tile wider than the problem: a [128, D] block for an 8-query
+    # batch is pure padding traffic.
+    while bq > MIN_BLOCK_Q and bq > max(q, 1):
+        bq //= 2
+    return bq

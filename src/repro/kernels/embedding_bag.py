@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import bucketing
+
 
 def _kernel(idx_ref, seg_ref, w_ref, table_ref, out_ref):
     i = pl.program_id(0)
@@ -58,6 +60,7 @@ def embedding_bag(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
 
     Returns: [B, E] f32.
     """
+    bucketing.record_trace("embedding_bag")  # trace-time: one per signature
     v, e = table.shape
     l = indices.shape[0]
     if weights is None:

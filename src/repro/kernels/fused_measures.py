@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune, bucketing
+
 CUTOFFS = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
 SUCCESS_CUTOFFS = (1, 5, 10)
 
@@ -166,10 +168,20 @@ def _measure_call(q_pad: int, d: int, block_q: int, relevance_level: float,
 
 @functools.partial(jax.jit, static_argnames=("block_q", "relevance_level",
                                              "interpret"))
-def fused_measures(rel_sorted, judged_sorted, scalars, block_q: int = 8,
+def fused_measures(rel_sorted, judged_sorted, scalars,
+                   block_q: int | None = None,
                    relevance_level: float = 1.0, interpret: bool = True):
-    """All 45 trec_eval measures in one VMEM pass.  Returns [Q, 64] f32."""
+    """All 45 trec_eval measures in one VMEM pass.  Returns [Q, 64] f32.
+
+    ``block_q=None`` (the default) consults the roofline-driven autotuner
+    (``kernels.autotune.block_q_for``) — a deterministic function of the
+    ``[Q, D]`` shape, resolved at trace time, so it adds no compiled
+    signatures beyond the shape classes themselves.
+    """
+    bucketing.record_trace("fused_measures")  # trace-time: one per signature
     q, d = rel_sorted.shape
+    if block_q is None:
+        block_q = autotune.block_q_for(q, d)
     q_pad = ((q + block_q - 1) // block_q) * block_q
     if q_pad != q:
         pad = ((0, q_pad - q), (0, 0))

@@ -1,13 +1,38 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True everywhere (this container is CPU-only); on a
-real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` or pass
-``interpret=False``.
+Execution-mode (``interpret``) resolution, in priority order:
+
+1. an explicit ``interpret=`` argument on any wrapper call;
+2. the module global :data:`INTERPRET`, read at **call time**.  Every
+   kernel jit treats ``interpret`` as a *static* argument, so flipping the
+   global never mutates a warm executable — it selects a different jit
+   cache entry on the next call (both modes can live in the cache side by
+   side, and flipping back reuses the earlier entries).  The one caveat:
+   objects that snapshot the global at construction —
+   :class:`repro.distributed.ShardedEvaluator` captures it into its
+   compiled dispatch closure — keep their captured mode for their
+   lifetime; rebuild them after flipping (``tests/test_kernels.py``
+   pins both behaviours);
+3. :data:`INTERPRET` itself is resolved once at import by
+   :func:`resolve_interpret`: the ``REPRO_INTERPRET`` environment variable
+   wins when set (``1/true/yes/on/interpret`` → interpret,
+   ``0/false/no/off/compiled`` → compiled), otherwise the JAX backend
+   decides — **compiled (``False``) on TPU**, interpret everywhere else
+   (the kernels are Mosaic-TPU programs; CPU/GPU hosts can only interpret
+   them).  ``interpret=False`` on a non-TPU backend fails loudly at
+   lowering time rather than silently falling back.
+
+The compiled path is the default wherever it is valid; the
+compiled-vs-interpret conformance gate in ``tests/test_kernels.py`` keeps
+the two modes interchangeable (bit-identical when the resolved default
+*is* the interpreter, within the documented ~1-ulp float tolerance when a
+real TPU compiles them).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +42,47 @@ from repro.kernels import fused_measures as _fm
 from repro.kernels import topk as _topk
 from repro.kernels import embedding_bag as _eb
 
-INTERPRET = True
+_TRUTHY = ("1", "true", "yes", "on", "interpret")
+_FALSY = ("0", "false", "no", "off", "compiled")
+
+
+def resolve_interpret(env: Optional[str] = None,
+                      backend: Optional[str] = None) -> bool:
+    """Resolve the default Pallas execution mode.
+
+    ``env`` defaults to ``os.environ["REPRO_INTERPRET"]`` and overrides
+    everything when non-empty; ``backend`` defaults to
+    ``jax.default_backend()``.  Returns True (interpret) unless the
+    backend can actually compile the Mosaic-TPU kernels.
+
+    >>> resolve_interpret(env="0")
+    False
+    >>> resolve_interpret(env="true")
+    True
+    >>> resolve_interpret(env="", backend="tpu")
+    False
+    >>> resolve_interpret(env="", backend="cpu")
+    True
+    """
+    if env is None:
+        env = os.environ.get("REPRO_INTERPRET")
+    if env is not None and env.strip():
+        flag = env.strip().lower()
+        if flag in _TRUTHY:
+            return True
+        if flag in _FALSY:
+            return False
+        raise ValueError(
+            f"REPRO_INTERPRET={env!r} not understood "
+            f"(truthy: {_TRUTHY}, falsy: {_FALSY})")
+    if backend is None:
+        backend = jax.default_backend()
+    return backend != "tpu"
+
+
+#: process-wide default execution mode, backend-resolved at import (see
+#: the module docstring for the full precedence rules)
+INTERPRET = resolve_interpret()
 
 FUSED_COLUMNS: Tuple[str, ...] = tuple(_fm.COLUMNS)
 
@@ -35,9 +100,10 @@ def embedding_bag(table, indices, segment_ids, n_bags, weights=None,
 
 
 def fused_measures_cols(rel_sorted, judged_sorted, scalars,
-                        relevance_level=1.0, interpret=None):
+                        relevance_level=1.0, block_q=None, interpret=None):
+    """All fused measure columns; ``block_q=None`` → roofline-autotuned."""
     return _fm.fused_measures(
-        rel_sorted, judged_sorted, scalars,
+        rel_sorted, judged_sorted, scalars, block_q=block_q,
         relevance_level=relevance_level,
         interpret=INTERPRET if interpret is None else interpret)
 
@@ -59,7 +125,7 @@ def make_scalars(n_rel, n_judged_nonrel, ideal_rel):
 
 
 def evaluate_fused(batch: M.EvalBatch, relevance_level: float = 1.0,
-                   interpret=None):
+                   block_q=None, interpret=None):
     """EvalBatch → dict of per-query measures via the fused kernel path.
 
     Sort with the XLA multi-key sort (exact trec_eval order), then one fused
@@ -70,7 +136,7 @@ def evaluate_fused(batch: M.EvalBatch, relevance_level: float = 1.0,
     scal = make_scalars(batch.n_rel, batch.n_judged_nonrel, batch.ideal_rel)
     cols = fused_measures_cols(s.rel, s.judged, scal,
                                relevance_level=relevance_level,
-                               interpret=interpret)
+                               block_q=block_q, interpret=interpret)
     qm = batch.query_mask
     zero = jnp.zeros_like(cols[:, 0])
     return {

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import bitonic
+from repro.kernels import bitonic, bucketing
 
 NEG_INF = float("-inf")
 
@@ -77,6 +77,7 @@ def topk(scores: jax.Array, k: int, block_d: int | None = None,
     Ties: smaller index first (trec_eval with index tiebreak).  Rows shorter
     than k are padded with -inf values / out-of-range indices.
     """
+    bucketing.record_trace("topk")  # trace-time: one per compiled signature
     q, d = scores.shape
     k2 = _next_pow2(k, 128)  # lane-aligned candidate buffer
     if block_d is None:

@@ -18,6 +18,10 @@ Semantics:
 * each flush calls ``flush_fn(key, items)`` — an async callable returning
   one result per item, in order.  Results (or the raised exception) are
   fanned back out to every waiter;
+* cancellation fans out too: ``asyncio.CancelledError`` is a
+  ``BaseException``, so it is handled on its own path — a cancelled flush
+  (or a timer cancelled mid-window at teardown) cancels every coalesced
+  waiter's future and re-raises, instead of leaving them pending forever;
 * ``window=0`` still coalesces: the flush is scheduled as a task, so every
   request already sitting in the event-loop's ready queue joins the batch.
 
@@ -82,8 +86,21 @@ class MicroBatcher:
         try:
             if self.window > 0:
                 await asyncio.sleep(self.window)
-        finally:
-            self._timers.pop(key, None)
+        except asyncio.CancelledError:
+            # Cancelled while waiting out the window.  Two callers do this:
+            # ``_flush_now`` (which has ALREADY claimed the batch — our key
+            # may even belong to a newer generation by now) and external
+            # teardown (which has not).  Only if we are still the registered
+            # timer is the pending batch ours to clean up; claim it and
+            # cancel its waiters so no submit() awaits a flush that will
+            # never come.  Either way the cancellation keeps propagating.
+            if self._timers.get(key) is asyncio.current_task():
+                del self._timers[key]
+                for _, fut in self._pending.pop(key, []):
+                    if not fut.done():
+                        fut.cancel()
+            raise
+        self._timers.pop(key, None)
         # Claim the batch and mark it in flight in the same loop step the
         # timer leaves the registry, so idle() never sees a gap between
         # "timer gone" and "flush running" (drain relies on this).
@@ -125,6 +142,17 @@ class MicroBatcher:
                 raise RuntimeError(
                     f"flush returned {len(results)} results for "
                     f"{len(items)} items")
+        except asyncio.CancelledError:
+            # CancelledError is a BaseException (py3.8+), so the Exception
+            # clause below never sees it.  A cancelled flush — the flush_fn
+            # was cancelled, or the flush task itself was — must still fan
+            # out to its waiters, or every submit() coalesced into this
+            # batch awaits a future nobody will ever resolve.  Then
+            # re-raise: cancellation must keep propagating to the task.
+            for _, fut in batch:
+                if not fut.done():
+                    fut.cancel()
+            raise
         except Exception as exc:  # noqa: BLE001 — fan the error out to waiters
             for _, fut in batch:
                 if not fut.done():

@@ -22,6 +22,8 @@ from typing import Callable, Dict, Iterator, Optional, TypeVar
 
 T = TypeVar("T")
 
+_MISSING = object()  # sentinel: distinguishes "absent" from "stored None"
+
 
 class LRUCache:
     """A thread-safe, bounded, least-recently-used mapping.
@@ -29,7 +31,11 @@ class LRUCache:
     ``get`` and ``put`` both count as a "use".  When an insert pushes the
     size past ``capacity``, the least-recently-used entry is dropped and the
     optional ``on_evict(key, value)`` hook fires (the service uses it to
-    count evictions and release per-collection state).
+    count evictions and release per-collection state).  Replacing an
+    existing key's entry with a DIFFERENT value fires the hook too — the
+    displaced value leaves the cache just as surely as an evicted one, and
+    whoever owns its resources must hear about it.  Re-putting the same
+    object is a no-op refresh and fires nothing.
 
     >>> c = LRUCache(capacity=2)
     >>> c.put('a', 1); c.put('b', 2)
@@ -50,6 +56,7 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.replacements = 0
 
     def get(self, key: str) -> Optional[T]:
         """The entry for ``key`` (refreshing its recency), or ``None``."""
@@ -62,16 +69,26 @@ class LRUCache:
             return self._entries[key]
 
     def put(self, key: str, value: T) -> None:
-        """Insert/replace ``key``, evicting the LRU entry past capacity."""
-        evicted = None
+        """Insert/replace ``key``, evicting the LRU entry past capacity.
+
+        A replacement (same key, different value object) fires ``on_evict``
+        for the displaced value; identity, not equality, decides — putting
+        the same object back is a recency refresh only.
+        """
+        displaced = []  # (key, value) pairs leaving the cache; hook per pair
         with self._lock:
+            old = self._entries.get(key, _MISSING)
             self._entries[key] = value
             self._entries.move_to_end(key)
+            if old is not _MISSING and old is not value:
+                self.replacements += 1
+                displaced.append((key, old))
             if len(self._entries) > self.capacity:
-                evicted = self._entries.popitem(last=False)
+                displaced.append(self._entries.popitem(last=False))
                 self.evictions += 1
-        if evicted is not None and self._on_evict is not None:
-            self._on_evict(*evicted)
+        if self._on_evict is not None:
+            for pair in displaced:
+                self._on_evict(*pair)
 
     def pop(self, key: str) -> Optional[T]:
         """Remove and return ``key``'s entry (no evict hook), or ``None``."""
@@ -95,4 +112,5 @@ class LRUCache:
         with self._lock:
             return {"size": len(self._entries), "capacity": self.capacity,
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+                    "evictions": self.evictions,
+                    "replacements": self.replacements}

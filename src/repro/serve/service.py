@@ -73,6 +73,20 @@ class _Collection:
             self._sharded = ShardedEvaluator(self.evaluator)
         return self._sharded
 
+    def release(self) -> None:
+        """Drop everything reachable only through this collection.
+
+        Called by the service's cache ``on_evict`` hook — on LRU eviction
+        AND on re-registration of the same ``qrel_id``.  Registered run
+        buffers and the lazily built sharded evaluator (which pins a
+        compiled dispatch closure plus device-resident qrel slabs) are the
+        heavyweight references; clearing them here means a displaced
+        collection's memory is reclaimable as soon as in-flight requests
+        holding it finish, not whenever the GC finds the cycle.
+        """
+        self.runs.clear()
+        self._sharded = None
+
 
 class EvaluationService:
     """Async evaluation over cached collections with request coalescing.
@@ -103,7 +117,9 @@ class EvaluationService:
 
         self._select_backend = select_backend
         self.default_backend = backend
-        self._collections = LRUCache(max_collections)
+        self._collections = LRUCache(max_collections,
+                                     on_evict=self._release_collection)
+        self._released = 0  # collections displaced (evicted or replaced)
         self._batcher = MicroBatcher(self._flush, window=window,
                                      max_batch=max_batch)
         self.max_pending = int(max_pending)
@@ -155,7 +171,23 @@ class EvaluationService:
 
     def drop_qrel(self, qrel_id: str) -> bool:
         """Explicitly release a collection (True if it was resident)."""
-        return self._collections.pop(qrel_id) is not None
+        col = self._collections.pop(qrel_id)
+        if col is None:
+            return False
+        self._release_collection(qrel_id, col)
+        return True
+
+    def _release_collection(self, qrel_id: str, col: _Collection) -> None:
+        """Cache ``on_evict`` hook: a collection left the resident set.
+
+        Fires for LRU eviction, for replacement via re-registration of the
+        same ``qrel_id``, and for explicit ``drop_qrel``.  Without this the
+        displaced collection's run buffers and sharded dispatch stayed
+        strongly referenced by whatever still pointed at the old object —
+        the slow leak this hook exists to close.
+        """
+        self._released += 1
+        col.release()
 
     # -- evaluation -----------------------------------------------------------
 
@@ -291,5 +323,6 @@ class EvaluationService:
         out["max_batch"] = self._batcher.max_batch
         out["max_pending"] = self.max_pending
         out["cache"] = self._collections.stats()
+        out["released_collections"] = self._released
         out["collections"] = sorted(self._collections.keys())
         return out

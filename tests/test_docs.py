@@ -45,6 +45,9 @@ def test_doc_code_blocks_run(path):
     "repro.client",
     "repro.client.aio",
     "repro.client.sync",
+    "repro.kernels.ops",
+    "repro.kernels.bucketing",
+    "repro.kernels.autotune",
 ])
 def test_docstring_examples(module_name):
     import importlib
@@ -60,5 +63,37 @@ def test_readme_documents_required_sections():
         readme = fh.read()
     for needle in ("python -m repro", "make verify", "Module map",
                    "tokenize_run", "ShardedEvaluator", "repro.serve",
-                   "EvaluationService"):
+                   "EvaluationService", "REPRO_INTERPRET",
+                   "kernels/bucketing.py"):
         assert needle in readme, needle
+
+
+def test_benchmark_segment_names_match_docs():
+    """`benchmarks.run --list` and the docs must name the same segments.
+
+    The registry (``benchmarks.run.SEGMENTS``) is the single source of
+    truth; the run.py module docstring and the README's segment list must
+    mention every name, so ``--only`` help, docs, and CI never drift.
+    """
+    import sys
+
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import SEGMENTS
+    finally:
+        sys.path.pop(0)
+    names = list(SEGMENTS)
+    assert len(names) == len(set(names))
+
+    import benchmarks.run as run_mod
+
+    for name in names:
+        assert f"``{name}``" in run_mod.__doc__, (
+            f"segment {name!r} missing from benchmarks/run.py docstring")
+    with open(os.path.join(ROOT, "README.md")) as fh:
+        readme = fh.read()
+    m = re.search(r"Full segment list: (.*?)\.\n", readme, re.DOTALL)
+    assert m, "README.md lost its 'Full segment list:' line"
+    readme_names = re.findall(r"`([a-z0-9_]+)`", m.group(1))
+    assert readme_names == names, (
+        f"README segment list {readme_names} != registry {names}")

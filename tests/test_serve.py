@@ -376,6 +376,141 @@ def test_batcher_error_fans_out_to_all_waiters():
     asyncio.run(main())
 
 
+def test_lru_cache_replacement_fires_hook_and_counter():
+    """put() on a resident key must release the displaced value (the leak)."""
+    gone = []
+    c = LRUCache(4, on_evict=lambda k, v: gone.append((k, v)))
+    c.put("a", "old")
+    c.put("a", "new")                       # replacement, same key
+    assert gone == [("a", "old")]
+    assert c.get("a") == "new"
+    assert c.stats()["replacements"] == 1
+    assert c.stats()["evictions"] == 0      # replacement is not an eviction
+    # re-putting the SAME object is a recency refresh, not a displacement
+    c.put("a", "new")
+    assert gone == [("a", "old")]
+    assert c.stats()["replacements"] == 1
+    # a stored None is still a real entry: replacing it fires too
+    c.put("n", None)
+    c.put("n", 0)
+    assert gone[-1] == ("n", None)
+
+
+def test_lru_cache_replacement_and_eviction_compose():
+    gone = []
+    c = LRUCache(2, on_evict=lambda k, v: gone.append((k, v)))
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("a", 10)      # replace refreshes recency: 'b' is now LRU
+    c.put("c", 3)       # capacity eviction drops 'b'
+    assert gone == [("a", 1), ("b", 2)]
+    assert sorted(c.keys()) == ["a", "c"]
+    s = c.stats()
+    assert s["replacements"] == 1 and s["evictions"] == 1
+
+
+def test_batcher_cancelled_flush_cancels_all_waiters():
+    """CancelledError from flush_fn must not strand coalesced waiters.
+
+    It is a BaseException, so the generic error fan-out never sees it; the
+    regression was three submit() coroutines awaiting futures nobody would
+    ever resolve.  wait_for puts a hard bound on the hang.
+    """
+    async def main():
+        async def flush(key, items):
+            raise asyncio.CancelledError()
+
+        mb = MicroBatcher(flush, window=0.005)
+        results = await asyncio.wait_for(
+            asyncio.gather(*(mb.submit("k", i) for i in range(3)),
+                           return_exceptions=True),
+            timeout=2.0)
+        assert all(isinstance(r, asyncio.CancelledError) for r in results)
+        assert mb.flushes == 1          # the flush still counts
+        assert mb.idle()                # nothing left pending or in flight
+
+    asyncio.run(main())
+
+
+def test_batcher_timer_cancellation_rejects_pending_waiters():
+    """Cancelling a window timer (teardown) cancels the waiters it covered."""
+    async def main():
+        async def flush(key, items):
+            return items
+
+        mb = MicroBatcher(flush, window=30.0)   # far beyond the test
+        waiter = asyncio.ensure_future(mb.submit("k", 1))
+        await asyncio.sleep(0.01)               # timer task enters its sleep
+        (timer,) = mb._timers.values()
+        timer.cancel()
+        with pytest.raises(asyncio.CancelledError):
+            await asyncio.wait_for(waiter, timeout=2.0)
+        assert mb.idle()                        # no orphaned pending state
+
+    asyncio.run(main())
+
+
+def test_batcher_size_cap_flush_survives_timer_cancel_race():
+    """_flush_now's own timer cancel must not touch the claimed batch."""
+    async def main():
+        async def flush(key, items):
+            return [x * 10 for x in items]
+
+        mb = MicroBatcher(flush, window=30.0, max_batch=2)
+        # first submit opens the window; second hits the size cap, which
+        # cancels the timer and flushes both immediately
+        results = await asyncio.wait_for(
+            asyncio.gather(mb.submit("k", 1), mb.submit("k", 2)),
+            timeout=2.0)
+        assert results == [10, 20]
+        await asyncio.sleep(0.01)   # let the cancelled timer task finish
+        assert mb.idle()
+
+    asyncio.run(main())
+
+
+def test_service_reregister_releases_old_collection():
+    """Re-registering a qrel_id must release the displaced collection."""
+    qrel = {"q1": {"d1": 1, "d2": 0}}
+    run = {"q1": {"d1": 2.0, "d2": 1.0}}
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+        svc.register_run("c", "r", run=run)
+        old = svc._collections.get("c")
+        assert old.runs                  # the state that used to leak
+        svc.register_qrel("c", qrel, ("map",))
+        assert not old.runs              # displaced collection was released
+        assert old._sharded is None
+        s = svc.stats()
+        assert s["cache"]["replacements"] == 1
+        assert s["released_collections"] == 1
+        # the fresh collection starts clean and still serves
+        with pytest.raises(KeyError):
+            await svc.evaluate("c", run_ref="r", scores=[1.0, 2.0])
+        res = await svc.evaluate("c", run=run)
+        assert res.per_query["q1"]["map"] == 1.0
+
+    asyncio.run(main())
+
+
+def test_service_drop_qrel_releases_state():
+    qrel = {"q1": {"d1": 1}}
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+        svc.register_run("c", "r", run={"q1": {"d1": 1.0}})
+        col = svc._collections.get("c")
+        assert svc.drop_qrel("c") is True
+        assert not col.runs
+        assert svc.stats()["released_collections"] == 1
+        assert svc.drop_qrel("c") is False
+
+    asyncio.run(main())
+
+
 def test_batcher_separate_keys_flush_separately():
     async def main():
         calls = []
