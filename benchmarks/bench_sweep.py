@@ -1,0 +1,118 @@
+"""Sweep segment: K-run batched evaluation + in-JAX significance testing.
+
+Two claims measured, both at K in the tens-to-hundreds (the hyperparameter
+sweeps the paper argues cheap evaluation enables):
+
+1. **Sweep evaluation throughput** — ``evaluate_sweep`` (K runs stacked on
+   the query axis, chunked measure-core dispatches) vs the loop of K
+   independent ``evaluate_buffer`` calls it is bit-identical to.  Both
+   paths are post-tokenization, so the delta is pure dispatch/padding
+   amortization.
+2. **Significance-testing speedup** — the vectorized all-pairs paired
+   t-test + Holm correction (:mod:`repro.stats`, one ``[K, K, Q]``
+   reduction) vs the scipy-per-pair baseline every IR toolkit ships: a
+   Python loop of ``scipy.stats.ttest_rel`` over all K·(K-1)/2 pairs plus
+   a numpy Holm pass.  The acceptance gate is >=5x at K>=64; the scipy
+   baseline row is skipped (with a note) when scipy is not installed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+
+from repro.core import RelevanceEvaluator, evaluate_sweep
+from repro.data.synthetic_ir import synthesize_run
+
+from benchmarks.common import time_call
+
+#: (K, Q, D) grid: runs per sweep, queries, docs per query
+GRID = ((16, 64, 32), (64, 64, 32))
+GRID_FULL = ((16, 128, 64), (64, 128, 64), (128, 128, 64), (256, 128, 64))
+
+MEASURES = ("map", "ndcg", "P_10")
+
+
+def _scipy_pairs(x: np.ndarray):
+    """The baseline: scipy per pair + numpy Holm over the p matrix."""
+    from scipy import stats as sps
+
+    k = x.shape[0]
+    t = np.zeros((k, k))
+    p = np.ones((k, k))
+    for i in range(k):
+        for j in range(i + 1, k):
+            r = sps.ttest_rel(x[i], x[j])
+            t[i, j], t[j, i] = r.statistic, -r.statistic
+            p[i, j] = p[j, i] = r.pvalue
+    iu = np.triu_indices(k, 1)
+    flat = p[iu]
+    order = np.argsort(flat)
+    m = len(flat)
+    adj = np.minimum(
+        np.maximum.accumulate(flat[order] * (m - np.arange(m))), 1.0)
+    holm = np.empty_like(flat)
+    holm[order] = adj
+    out = p.copy()
+    out[iu] = holm
+    out[iu[1], iu[0]] = holm
+    return t, p, out
+
+
+def run(full: bool = False) -> List[Dict]:
+    from repro import stats
+
+    reps = 10 if full else 3
+    grid = GRID_FULL if full else GRID
+    try:
+        import scipy.stats  # noqa: F401
+        have_scipy = True
+    except ImportError:
+        have_scipy = False
+        print("scipy not installed: per-pair baseline rows skipped")
+
+    rows: List[Dict] = []
+    rng = np.random.default_rng(0)
+    for k, q, d in grid:
+        run0, qrel = synthesize_run(q, d, seed=7)
+        ev = RelevanceEvaluator(qrel, MEASURES)
+        runs = []
+        for _ in range(k):
+            scored = {qid: {doc: float(s) for doc, s in
+                            zip(docs, rng.random(len(docs)))}
+                      for qid, docs in run0.items()}
+            runs.append(scored)
+        bufs = [ev.tokenize_run(r) for r in runs]
+
+        sweep_t = time_call(lambda: evaluate_sweep(ev, bufs), reps=reps)
+        loop_t = time_call(
+            lambda: [ev.evaluate_buffer(b) for b in bufs], reps=reps)
+
+        x = np.ascontiguousarray(evaluate_sweep(ev, bufs).measure("map"))
+
+        def jax_stats():
+            _, p = stats.paired_t_matrix(x)
+            return jax.block_until_ready(stats.holm_matrix(p))
+
+        stats_t = time_call(jax_stats, reps=reps)
+        row = {
+            "segment": "sweep", "n_runs": k, "n_queries": q, "n_docs": d,
+            "sweep_us": sweep_t * 1e6, "loop_us": loop_t * 1e6,
+            "eval_speedup": loop_t / sweep_t,
+            "stats_us": stats_t * 1e6,
+        }
+        if have_scipy:
+            scipy_t = time_call(lambda: _scipy_pairs(x), reps=reps)
+            row["scipy_us"] = scipy_t * 1e6
+            row["stats_speedup"] = scipy_t / stats_t
+            extra = f"  t+holm {stats_t*1e3:.2f}ms vs scipy " \
+                    f"{scipy_t*1e3:.2f}ms ({scipy_t/stats_t:.1f}x)"
+        else:
+            extra = f"  t+holm {stats_t*1e3:.2f}ms (no scipy baseline)"
+        print(f"sweep k={k} q={q} d={d}: eval {sweep_t*1e3:.1f}ms vs "
+              f"loop {loop_t*1e3:.1f}ms ({loop_t/sweep_t:.2f}x){extra}")
+        rows.append(row)
+    return rows

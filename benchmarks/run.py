@@ -24,6 +24,10 @@ Segments (repeat ``--only`` to pick several):
   ``AsyncEvalClient`` pipelining at several depths; see ``bench_client``.
 * ``qlearning`` — the paper's RL demo, episodes/s.
 * ``batched``   — dense batched evaluation vs the dict API.
+* ``sweep``     — K-run sweep evaluation (``evaluate_sweep``) vs K
+  independent ``evaluate_buffer`` calls, and the vectorized all-pairs
+  paired t-test + Holm (``repro.stats``) vs a scipy-per-pair baseline;
+  see ``bench_sweep``.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a JSON dump under
 experiments/bench_results.json for EXPERIMENTS.md).
@@ -48,6 +52,7 @@ SEGMENTS = {
     "client": "bench_client.run",
     "qlearning": "bench_qlearning.run",
     "batched": "bench_batched.run",
+    "sweep": "bench_sweep.run",
 }
 
 
@@ -63,7 +68,8 @@ def main(argv=None) -> None:
                          "accounting, sharded = multi-device scaling, "
                          "serve = async service throughput/latency, "
                          "client = TCP client library end to end, "
-                         "qlearning = RL demo, batched = dense batched eval")
+                         "qlearning = RL demo, batched = dense batched "
+                         "eval, sweep = K-run sweep + significance stats")
     ap.add_argument("--list", action="store_true",
                     help="print the segment names (one per line) and exit")
     args = ap.parse_args(argv)
@@ -74,13 +80,15 @@ def main(argv=None) -> None:
         return
 
     from benchmarks import bench_batched, bench_client, bench_kernels, \
-        bench_qlearning, bench_rq1, bench_rq2, bench_serve, bench_sharded
+        bench_qlearning, bench_rq1, bench_rq2, bench_serve, bench_sharded, \
+        bench_sweep
 
     modules = {
         "bench_batched": bench_batched, "bench_client": bench_client,
         "bench_kernels": bench_kernels, "bench_qlearning": bench_qlearning,
         "bench_rq1": bench_rq1, "bench_rq2": bench_rq2,
         "bench_serve": bench_serve, "bench_sharded": bench_sharded,
+        "bench_sweep": bench_sweep,
     }
     suites = {}
     for name, ref in SEGMENTS.items():
@@ -148,6 +156,11 @@ def main(argv=None) -> None:
     for row in results.get("batched", []):
         print(f"batched_dense,{row['dense_batched_us']:.1f},"
               f"speedup_vs_dict={row['dense_speedup_vs_dict']:.2f}")
+    for row in results.get("sweep", []):
+        sp = row.get("stats_speedup")
+        sp_str = f"{sp:.2f}" if sp is not None else "nan"
+        print(f"sweep_k{row['n_runs']},{row['sweep_us']:.1f},"
+              f"stats_speedup={sp_str}")
 
 
 if __name__ == "__main__":

@@ -60,12 +60,9 @@ AGGREGATE_ONLY = M.AGGREGATE_ONLY_MEASURES
 
 def ordered_keys(measures: Sequence[str]) -> List[str]:
     """Output keys for a measure set, in trec_eval print order."""
-    # parse_measures yields one (family, params) entry per selector, so
-    # repeated same-family selectors (-m P_5 -m P_10) must merge, not
-    # overwrite each other.
-    parsed: Dict[str, tuple] = {}
-    for fam, params in M.parse_measures(measures):
-        parsed[fam] = tuple(sorted(set(parsed.get(fam, ()) + params)))
+    # parse_measures merges repeated same-family selectors (-m P_5 -m P_10)
+    # into one entry with the union of params; this only reorders families.
+    parsed: Dict[str, tuple] = dict(M.parse_measures(measures))
     keys: List[str] = []
     for fam in FAMILY_ORDER:
         if fam in parsed:

@@ -54,7 +54,8 @@ from repro.serve.wire import DEFAULT_FRAME_LIMIT
 #: (register_*) or read it.  ``drop_qrel`` is excluded — its *result* is
 #: not idempotent (a retry of a delivered drop reports ``dropped: false``).
 IDEMPOTENT_OPS = frozenset({
-    "register_qrel", "register_run", "evaluate", "stats", "ping", "auth",
+    "register_qrel", "register_run", "evaluate", "compare", "stats", "ping",
+    "auth",
 })
 
 
@@ -356,6 +357,29 @@ class AsyncEvalClient:
             coros = [self.evaluate(qrel_id, run_ref=run_ref, scores=s)
                      for s in scores_list]
         return list(await asyncio.gather(*coros))
+
+    async def compare(self, qrel_id: str, runs=None,
+                      run_refs: Optional[Sequence[str]] = None,
+                      measure: str = "map", *, tests=None,
+                      n_permutations: Optional[int] = None,
+                      seed: Optional[int] = None,
+                      alpha: Optional[float] = None,
+                      run_names: Optional[Sequence[str]] = None) -> dict:
+        """Paired significance tests across K >= 2 runs on one measure.
+
+        Exactly one of ``runs`` (``{name: run}`` mapping or sequence of dict
+        runs) or ``run_refs`` (server-side ``register_run`` names) selects
+        the systems.  Returns the server's bundle: ``run_names``, ``qids``,
+        per-run ``means``, the ``t``/``p``/``p_holm``/``p_bonferroni``
+        matrices (plus ``p_permutation*`` with ``tests=["t",
+        "permutation"]``), and the Holm-corrected ``significant`` mask at
+        ``alpha``.  Omitted keyword arguments use the server defaults.
+        """
+        return await self._request(
+            "compare", qrel_id=qrel_id, runs=runs, run_refs=run_refs,
+            measure=measure, tests=list(tests) if tests is not None else None,
+            n_permutations=n_permutations, seed=seed, alpha=alpha,
+            run_names=run_names)
 
     async def drop_qrel(self, qrel_id: str) -> bool:
         """Release a collection; NOT retried on connection loss."""

@@ -122,6 +122,18 @@ class EvalClient:
                                  run_ref=run_ref, scores=scores),
             self._loop)
 
+    def compare(self, qrel_id: str, runs=None,
+                run_refs: Optional[Sequence[str]] = None,
+                measure: str = "map", *, tests=None,
+                n_permutations: Optional[int] = None,
+                seed: Optional[int] = None, alpha: Optional[float] = None,
+                run_names: Optional[Sequence[str]] = None) -> dict:
+        """Paired significance tests across K runs (see the async client)."""
+        return self._call(self._async.compare(
+            qrel_id, runs=runs, run_refs=run_refs, measure=measure,
+            tests=tests, n_permutations=n_permutations, seed=seed,
+            alpha=alpha, run_names=run_names))
+
     def drop_qrel(self, qrel_id: str) -> bool:
         return self._call(self._async.drop_qrel(qrel_id))
 

@@ -23,13 +23,16 @@ from repro.core.measures import (
     measure_keys,
     parse_measures,
 )
+from repro.core.sweep import SweepResult, evaluate_sweep
 from repro.core import streaming, trec, sorting
 
 __all__ = [
     "RelevanceEvaluator",
     "RunBuffer",
+    "SweepResult",
     "aggregate_results",
     "concat_run_buffers",
+    "evaluate_sweep",
     "batch_from_flat",
     "supported_measures",
     "AGGREGATE_ONLY_MEASURES",

@@ -286,7 +286,10 @@ def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...
 
     Accepts family names (``"ndcg_cut"`` → all default cutoffs), explicit
     params (``"P.5,10"``), and pytrec_eval output-style ids (``"P_5"``,
-    ``"ndcg_cut_10"``).
+    ``"ndcg_cut_10"``).  Selectors naming the same family merge into one
+    entry with the union of their params (sorted), so a repeated measure
+    list like ``("P_5", "P.5,10")`` yields each output key exactly once —
+    the contract the sweep/compare CLI's repeatable ``-m`` flag relies on.
     """
     out = []
     for m in sorted(set(measures)):
@@ -317,7 +320,10 @@ def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...
             else:
                 params = tuple(float(k) for k in DEFAULT_CUTOFFS)
         out.append((fam, params))
-    return tuple(sorted(out))
+    merged: Dict[str, Tuple[float, ...]] = {}
+    for fam, params in out:
+        merged[fam] = tuple(sorted(set(merged.get(fam, ()) + params)))
+    return tuple(sorted(merged.items()))
 
 
 def family_keys(fam: str, params: Tuple[float, ...]) -> Tuple[str, ...]:

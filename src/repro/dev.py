@@ -18,7 +18,17 @@ README.md:
    server through ``repro.client.EvalClient`` — pipelined requests that
    must coalesce, plus one >64 KiB ``register_qrel`` payload on each
    transport (the frame size that crashed the seed serve layer) —
-   asserting bit-identical results throughout.
+   asserting bit-identical results throughout, and
+5. the sweep smoke test (``python -m repro.dev sweep-smoke`` /
+   ``make sweep-smoke``): evaluate a small K-run sweep
+   (:func:`repro.core.evaluate_sweep`) and assert it is bit-identical to
+   the K independent ``evaluate_buffer`` calls it replaces, then run the
+   all-pairs paired t-test + Holm correction (:mod:`repro.stats`) and
+   check the statistics invariants (symmetric unit-diagonal p matrices,
+   Holm <= Bonferroni) plus the conformance fixture's known p-value, and
+6. the sweep benchmark smoke: ``python -m benchmarks.run --only sweep``
+   must complete and record its rows (CI asserts the >=5x
+   significance-stack speedup from the recorded results).
 
 Exit status is non-zero if any step fails.  ``make verify`` wraps this.
 """
@@ -147,6 +157,47 @@ _CLIENT_SMOKE = """
 """
 
 
+_SWEEP_SMOKE = """
+    import numpy as np
+    from repro import stats
+    from repro.core import RelevanceEvaluator, evaluate_sweep, trec
+
+    qrel = trec.load_qrel({qrel!r})
+    base = trec.load_run({run!r})
+    measures = ("map", "ndcg", "P_5")
+    k = 6
+    runs = [{{q: {{d: s + 0.25 * i * (1 if hash(d) % 2 else -1)
+                 for d, s in docs.items()}}
+             for q, docs in base.items()}} for i in range(k)]
+    ev = RelevanceEvaluator(qrel, measures)
+    result = evaluate_sweep(ev, [ev.tokenize_run(r) for r in runs])
+    # bit-identity: the sweep table IS the K independent evaluations
+    for ki, r in enumerate(runs):
+        want = ev.evaluate(r)
+        for qi, qid in enumerate(result.qids):
+            for mi, key in enumerate(result.measure_keys):
+                assert result.table[ki, qi, mi] == want[qid][key], \\
+                    (ki, qid, key)
+
+    x = np.asarray(result.measure("map"))
+    t, p = stats.paired_t_matrix(x)
+    holm = stats.holm_matrix(p)
+    bonf = stats.bonferroni_matrix(p)
+    t, p, holm, bonf = (np.asarray(a) for a in (t, p, holm, bonf))
+    assert np.array_equal(p, p.T) and np.array_equal(np.diag(p),
+                                                     np.ones(k))
+    assert np.array_equal(t, -t.T)
+    assert (holm <= bonf + 1e-7).all() and (holm <= 1.0).all()
+    # closed form at df=1: d=[0.1, 0.3] -> t=2, p = 1 - (2/pi)atan(2)
+    _, p2 = stats.paired_t_matrix(
+        np.array([[0.4, 0.6], [0.3, 0.3]], np.float32))
+    assert abs(float(p2[0, 1]) - 0.29516723) < 1e-6, float(p2[0, 1])
+    print(f"sweep smoke: OK ({{k}} runs x {{len(result.qids)}} queries x "
+          f"{{len(result.measure_keys)}} measures, bit-identical; "
+          "stats invariants + df=1 closed form hold)")
+"""
+
+
 def _env(extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
@@ -178,6 +229,15 @@ def client_smoke() -> int:
         cwd=ROOT, env=_env()).returncode
 
 
+def sweep_smoke() -> int:
+    """K-run sweep bit-identity + statistics invariants (step 5)."""
+    print("== sweep smoke (evaluate_sweep + repro.stats) ==", flush=True)
+    code = textwrap.dedent(_SWEEP_SMOKE.format(
+        qrel=_fixture("conformance.qrel"), run=_fixture("conformance.run")))
+    return subprocess.run([sys.executable, "-c", code], cwd=ROOT,
+                          env=_env()).returncode
+
+
 def verify() -> int:
     print("== tier-1 pytest ==", flush=True)
     rc = subprocess.run([sys.executable, "-m", "pytest", "-x", "-q"],
@@ -196,7 +256,16 @@ def verify() -> int:
     rc = serve_smoke()
     if rc != 0:
         return rc
-    return client_smoke()
+    rc = client_smoke()
+    if rc != 0:
+        return rc
+    rc = sweep_smoke()
+    if rc != 0:
+        return rc
+    print("== sweep bench smoke (--only sweep) ==", flush=True)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sweep"],
+        cwd=ROOT, env=_env()).returncode
 
 
 def main(argv=None) -> int:
@@ -207,7 +276,10 @@ def main(argv=None) -> int:
         return serve_smoke()
     if argv == ["client-smoke"]:
         return client_smoke()
-    print("usage: python -m repro.dev {verify|serve-smoke|client-smoke}",
+    if argv == ["sweep-smoke"]:
+        return sweep_smoke()
+    print("usage: python -m repro.dev "
+          "{verify|serve-smoke|client-smoke|sweep-smoke}",
           file=sys.stderr)
     return 2
 

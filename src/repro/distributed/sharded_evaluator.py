@@ -250,6 +250,25 @@ class ShardedEvaluator:
                 M.finalize_aggregates(aggs)))
         return results
 
+    def evaluate_table(self, bufs: Sequence) -> np.ndarray:
+        """Raw per-query measure rows for several buffers in ONE dispatch.
+
+        The sweep-tensor primitive behind
+        :func:`repro.core.sweep.evaluate_sweep`'s ``backend="sharded"``
+        path: buffers are stacked on the query axis, padded to the mesh,
+        shard_mapped once, and the unpadded ``[sum(len(b)), len(self.keys)]``
+        float32 row block comes back with no per-query dict materialization
+        — the caller reshapes it into the ``[K, Q, M]`` sweep tensor.
+        """
+        bufs = [b for b in bufs if len(b)]
+        if not bufs:
+            return np.empty((0, len(self.keys)), dtype=np.float32)
+        big = concat_run_buffers(bufs) if len(bufs) > 1 else bufs[0]
+        batch = self.evaluator.batch_from_buffer(
+            big, q_multiple=self.n_shards)
+        stacked, _ = self._dispatch(batch)
+        return np.asarray(stacked)[:len(big.qids)]
+
     def _rows_to_dicts(self, qids, table) -> Dict[str, Dict[str, float]]:
         return {
             qid: {k: float(table[i, j]) for j, k in enumerate(self.keys)}

@@ -16,8 +16,10 @@ requests are handled concurrently so the service can coalesce them)::
      "code": "not_found"}
 
 Operations: ``register_qrel``, ``register_run``, ``evaluate``,
-``drop_qrel``, ``stats``, ``ping``, ``auth``.  Field names mirror the
-keyword arguments of :class:`repro.serve.service.EvaluationService`.
+``compare`` (paired significance tests across K runs — see
+:meth:`EvaluationService.compare`), ``drop_qrel``, ``stats``, ``ping``,
+``auth``.  Field names mirror the keyword arguments of
+:class:`repro.serve.service.EvaluationService`.
 
 Every failure is a *response*, never a dead socket: unparseable lines,
 unknown ops, missing fields, and even request lines longer than the frame
@@ -67,6 +69,7 @@ REQUIRED_FIELDS = {
     "register_qrel": ("qrel_id", "qrel"),
     "register_run": ("qrel_id", "run_id"),
     "evaluate": ("qrel_id",),
+    "compare": ("qrel_id",),
     "drop_qrel": ("qrel_id",),
     "stats": (),
     "ping": (),
@@ -136,6 +139,15 @@ async def handle_request(service: EvaluationService, req: dict) -> dict:
                 scores=req.get("scores"))
             result = {"per_query": res.per_query,
                       "aggregates": res.aggregates}
+        elif op == "compare":
+            result = await service.compare(
+                req["qrel_id"], runs=req.get("runs"),
+                run_refs=req.get("run_refs"),
+                measure=req.get("measure", "map"),
+                tests=tuple(req.get("tests", ("t",))),
+                n_permutations=req.get("n_permutations", 2000),
+                seed=req.get("seed", 0), alpha=req.get("alpha", 0.05),
+                run_names=req.get("run_names"))
         elif op == "drop_qrel":
             result = {"dropped": service.drop_qrel(req["qrel_id"])}
         elif op == "stats":

@@ -37,10 +37,14 @@ cumulative sums, ~1 ulp on arbitrary float DCG sums (see
 from __future__ import annotations
 
 import asyncio
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import (Dict, List, Mapping, NamedTuple, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
 
 from repro.core import RelevanceEvaluator, aggregate_results
 from repro.core.evaluator import RunBuffer
+from repro.core.sweep import common_qids
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cache import LRUCache
 
@@ -235,6 +239,151 @@ class EvaluationService:
                 return await self._batcher.submit(qrel_id, (col, buf))
             finally:
                 self._stats["in_flight"] -= 1
+
+    # -- statistical comparison -----------------------------------------------
+
+    async def compare(self, qrel_id: str, runs=None,
+                      run_refs: Optional[Sequence[str]] = None, *,
+                      measure: str = "map", tests: Sequence[str] = ("t",),
+                      n_permutations: int = 2000, seed: int = 0,
+                      alpha: float = 0.05,
+                      run_names: Optional[Sequence[str]] = None
+                      ) -> Dict[str, object]:
+        """Paired significance tests across K >= 2 runs on one collection.
+
+        Exactly one of ``runs`` (a ``{name: run}`` mapping or a sequence of
+        dict runs, aligned to their common judged query set) or ``run_refs``
+        (names from :meth:`register_run` — the buffers must cover one shared
+        qid list and carry scores) selects the systems.  The K per-run
+        evaluations go through the SAME micro-batcher as ``evaluate``
+        requests, so one ``compare`` typically costs one coalesced backend
+        call; the K×K statistics (:mod:`repro.stats`) then run on an
+        executor thread.
+
+        Returns a JSON-friendly bundle: ``run_names``, ``measure``,
+        ``qids``, per-run ``means``, the ``t`` / ``p`` / ``p_holm`` /
+        ``p_bonferroni`` matrices (plus ``p_permutation*`` when
+        ``"permutation"`` is in ``tests``), and ``significant`` —
+        ``p_holm < alpha`` off the diagonal.
+        """
+        col = self._require(qrel_id)
+        self._stats["requests"] += 1
+        self._active += 1
+        try:
+            return await self._compare(col, qrel_id, runs, run_refs, measure,
+                                       tests, n_permutations, seed, alpha,
+                                       run_names)
+        finally:
+            self._active -= 1
+
+    async def _compare(self, col: "_Collection", qrel_id: str, runs,
+                       run_refs, measure, tests, n_permutations, seed,
+                       alpha, run_names) -> Dict[str, object]:
+        ev = col.evaluator
+        if measure not in ev.measure_keys:
+            raise ValueError(
+                f"measure {measure!r} is not computed by collection "
+                f"{qrel_id!r} (have: {list(ev.measure_keys)})")
+        given = [n for n, v in (("runs", runs), ("run_refs", run_refs))
+                 if v is not None]
+        if len(given) != 1:
+            raise ValueError(
+                f"need exactly one of runs/run_refs, got {given or 'none'}")
+        if runs is not None:
+            if isinstance(runs, Mapping):
+                if run_names is not None:
+                    raise ValueError(
+                        "run_names conflicts with a {name: run} mapping")
+                run_names = list(runs)
+                runs = list(runs.values())
+            else:
+                runs = list(runs)
+            if len(runs) < 2:
+                raise ValueError(f"compare needs >= 2 runs, got {len(runs)}")
+            if run_names is None:
+                run_names = [f"run_{i}" for i in range(len(runs))]
+            # dict-run tokenization off-loop, like evaluate's dict path
+            bufs = await asyncio.to_thread(self._aligned_buffers, ev, runs)
+        else:
+            refs = [str(r) for r in run_refs]
+            if len(refs) < 2:
+                raise ValueError(
+                    f"compare needs >= 2 run_refs, got {len(refs)}")
+            missing = [r for r in refs if r not in col.runs]
+            if missing:
+                raise KeyError(
+                    f"unknown run_ref {missing[0]!r} for qrel "
+                    f"{col.qrel_id!r} (registered: {sorted(col.runs)})")
+            bufs = [col.runs[r] for r in refs]
+            base = list(bufs[0].qids)
+            for r, buf in zip(refs, bufs):
+                if buf.scores is None:
+                    raise ValueError(
+                        f"registered run {r!r} has no scores; re-register "
+                        "with scores or pass dict runs")
+                if list(buf.qids) != base:
+                    raise ValueError(
+                        f"run_ref {r!r} covers different queries than "
+                        f"{refs[0]!r}; compared runs must share one qid "
+                        "list")
+            if run_names is None:
+                run_names = refs
+        run_names = [str(n) for n in run_names]
+        if len(run_names) != len(bufs):
+            raise ValueError(
+                f"{len(run_names)} run_names for {len(bufs)} runs")
+        qids = list(bufs[0].qids)
+        if len(qids) < 2:
+            raise ValueError(
+                f"paired tests need >= 2 common judged queries, got "
+                f"{len(qids)}")
+
+        # ONE backpressure slot for the whole request: the K coalesced
+        # submissions resolve together, and taking K slots could deadlock
+        # compare requests against max_pending.
+        async with self._sem:
+            n = self._stats["in_flight"] = self._stats["in_flight"] + 1
+            self._stats["peak_in_flight"] = max(
+                self._stats["peak_in_flight"], n)
+            try:
+                results = await asyncio.gather(
+                    *(self._batcher.submit(qrel_id, (col, buf))
+                      for buf in bufs))
+            finally:
+                self._stats["in_flight"] -= 1
+
+        x = np.array([[res.per_query[q][measure] for q in qids]
+                      for res in results], dtype=np.float32)
+        report = await asyncio.to_thread(self._significance, x, tuple(tests),
+                                         int(n_permutations), int(seed))
+        out: Dict[str, object] = {
+            "run_names": run_names, "measure": measure, "qids": qids,
+            "n_queries": len(qids), "alpha": float(alpha),
+        }
+        out.update({k: np.asarray(v, dtype=float).tolist()
+                    for k, v in report.items()})
+        k = len(run_names)
+        holm = np.asarray(report["p_holm"])
+        sig = (holm < float(alpha)) & ~np.eye(k, dtype=bool)
+        out["significant"] = sig.tolist()
+        return out
+
+    @staticmethod
+    def _aligned_buffers(ev: RelevanceEvaluator, runs) -> List[RunBuffer]:
+        """Tokenize dict runs on their common judged query set."""
+        qids = common_qids(ev._qid_index, runs)
+        if not qids:
+            raise ValueError("no common judged queries across the runs")
+        return [ev.tokenize_run({q: r[q] for q in qids}) for r in runs]
+
+    @staticmethod
+    def _significance(x: np.ndarray, tests: Tuple[str, ...],
+                      n_permutations: int, seed: int) -> Dict[str, object]:
+        from repro import stats
+
+        return stats.significance_report(x, tests=tests,
+                                         n_permutations=n_permutations,
+                                         seed=seed)
 
     async def _flush(self, qrel_id: str,
                      items: List[Tuple[_Collection, RunBuffer]]):

@@ -1,0 +1,49 @@
+"""In-JAX statistical comparison of evaluation sweeps.
+
+The experiment-suite workload (ROADMAP item 3) ends in a question no single
+measure value answers: *which of these K systems are actually different?*
+This package computes the standard IR answers — paired t-tests and paired
+(sign-flip) permutation tests over per-query scores — for **all K×K system
+pairs at once**, as vectorized JAX reductions.  There is no scipy loop per
+pair: one ``[K, Q]`` score matrix in, dense ``[K, K]`` statistic/p-value
+matrices out, with Bonferroni and Holm multiple-comparison corrections
+applied to the p-value matrix the same way.
+
+Layering: this package is pure array → array statistics.  It imports
+nothing from :mod:`repro.core` — the sweep evaluation that *produces* the
+``[K, Q]`` matrices lives in :func:`repro.core.sweep.evaluate_sweep`, the
+serving surface in :mod:`repro.serve` (the ``compare`` op), and the CLI in
+``python -m repro.compare``.
+
+>>> import numpy as np
+>>> from repro import stats
+>>> x = np.array([[0.6, 0.7, 0.5, 0.8],
+...               [0.5, 0.5, 0.4, 0.6],
+...               [0.1, 0.2, 0.1, 0.2]], dtype=np.float32)
+>>> t, p = stats.paired_t_matrix(x)
+>>> t.shape, float(t[0, 0]), bool(p[0, 2] < p[0, 1])  # zero diag; 0 vs 2 clearer
+((3, 3), 0.0, True)
+
+Every statistic is pinned to an independent reference in
+``tests/test_stats.py``: hand-computed fixtures (closed-form Student-t tail
+probabilities at small df), scipy cross-checks, and exact-enumeration
+bounds for the Monte Carlo permutation p-values.
+"""
+
+from repro.stats.corrections import bonferroni_matrix, holm_matrix
+from repro.stats.significance import (EXACT_ENUMERATION_MAX_Q,
+                                      paired_diff_means, paired_t_matrix,
+                                      paired_permutation_exact,
+                                      paired_permutation_matrix,
+                                      significance_report)
+
+__all__ = [
+    "EXACT_ENUMERATION_MAX_Q",
+    "paired_diff_means",
+    "paired_t_matrix",
+    "paired_permutation_matrix",
+    "paired_permutation_exact",
+    "significance_report",
+    "bonferroni_matrix",
+    "holm_matrix",
+]

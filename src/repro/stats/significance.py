@@ -1,0 +1,245 @@
+"""Paired significance tests over all K×K system pairs, vectorized in JAX.
+
+Input convention for every function: ``x`` is a ``[K, Q]`` matrix of
+per-query scores — row ``i`` is system ``i``'s value of ONE measure on the
+same ``Q`` queries (the pairing axis).  Rows must be aligned: column ``q``
+is the same query everywhere, which :func:`repro.core.sweep.evaluate_sweep`
+guarantees by evaluating every run on a common query list.
+
+All pairwise statistics are computed from the antisymmetric difference
+tensor ``d[i, j, q] = x[i, q] - x[j, q]`` with batched reductions — the
+K×K loop that a scipy formulation pays per pair collapses into a handful
+of XLA ops, which is what makes significance testing over hundreds of
+sweep variants a single-digit-millisecond operation
+(``benchmarks --only sweep``).
+
+Numerics: inputs are taken as float32 (the measure core's dtype).  The
+Student-t tail probability is the regularized incomplete beta function
+``I_{df/(df+t²)}(df/2, 1/2)`` via ``jax.scipy.special.betainc`` — within
+~2e-7 of scipy's float64 values at fixture scale (``tests/test_stats.py``
+pins hand-computed closed forms at df 1 and 3, where the t CDF has exact
+arctan expressions).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+#: queries beyond which exact sign-flip enumeration (2^Q patterns) is refused
+EXACT_ENUMERATION_MAX_Q = 20
+
+#: relative slack when counting permuted |means| against the observed |mean|
+#: — float32 resamples that tie the observed statistic must count as >=
+#: (the exact-enumeration tests re-derive the same counts with this rule)
+_TIE_RTOL = 1e-6
+
+
+def _as_kq(x) -> jnp.ndarray:
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"expected a [K, Q] score matrix, got shape {x.shape}")
+    if x.shape[1] < 2:
+        raise ValueError(
+            f"need at least 2 paired queries, got Q={x.shape[1]}")
+    return x
+
+
+def paired_diff_means(x) -> jnp.ndarray:
+    """``[K, K]`` matrix of mean per-query differences ``mean_q(x_i - x_j)``.
+
+    Antisymmetric with a zero diagonal; entry ``[i, j] > 0`` means system
+    ``i`` beats system ``j`` on average.
+
+    >>> import numpy as np
+    >>> m = paired_diff_means(np.array([[1.0, 1.0], [0.0, 0.5]]))
+    >>> np.asarray(m).tolist()
+    [[0.0, 0.75], [-0.75, 0.0]]
+    """
+    x = _as_kq(x)
+    row = jnp.mean(x, axis=1)
+    return row[:, None] - row[None, :]
+
+
+def _structure(mat, diag, *, anti: bool = False):
+    """Enforce exact (anti)symmetry + a fixed diagonal on a [K, K] matrix.
+
+    XLA fusion may evaluate the two broadcast operands of ``a - a.T``-style
+    expressions through differently-ordered reductions, leaving ~1e-8 noise
+    where the math says exactly 0 — so the structural invariants the tests
+    (and corrections) rely on are imposed from the upper triangle.
+    """
+    upper = jnp.triu(mat, 1)
+    eye = jnp.eye(mat.shape[0], dtype=mat.dtype)
+    return upper + (-upper.T if anti else upper.T) + diag * eye
+
+
+@jax.jit
+def _t_kernel(x):
+    k, q = x.shape
+    d = x[:, None, :] - x[None, :, :]  # [K, K, Q] paired differences
+    mean = jnp.mean(d, axis=-1)
+    var = jnp.sum((d - mean[..., None]) ** 2, axis=-1) / (q - 1)
+    se = jnp.sqrt(var / q)
+    # Degenerate pairs: se == 0 means every per-query difference is equal.
+    # All-zero differences (the diagonal, duplicated systems) get t = 0 /
+    # p = 1; a constant non-zero difference is infinitely significant
+    # (t = ±inf, p = 0) — matching the scipy.stats.ttest_rel limits.
+    t = jnp.where(se > 0, mean / jnp.where(se > 0, se, 1.0),
+                  jnp.where(mean == 0, 0.0, jnp.sign(mean) * jnp.inf))
+    df = jnp.float32(q - 1)
+    tail_x = df / (df + t * t)  # t=0 → 1 → p=1; t=±inf → 0 → p=0
+    p = jax.scipy.special.betainc(df / 2.0, 0.5, tail_x)
+    return _structure(t, 0.0, anti=True), _structure(p, 1.0)
+
+
+def paired_t_matrix(x):
+    """All-pairs two-sided paired t-test: ``(t, p)``, each ``[K, K]``.
+
+    ``t`` is antisymmetric with a zero diagonal; ``p`` is symmetric with a
+    unit diagonal (a system is never significantly different from itself).
+    Equivalent to ``scipy.stats.ttest_rel(x[i], x[j])`` for every pair, in
+    one batched reduction.
+
+    >>> import numpy as np
+    >>> x = np.array([[0.9, 0.8, 0.7, 0.6], [0.1, 0.2, 0.3, 0.4]])
+    >>> t, p = paired_t_matrix(x)
+    >>> float(t[0, 0]), float(p[0, 0]), bool(abs(t[0, 1]) > 2)
+    (0.0, 1.0, True)
+    """
+    return _t_kernel(_as_kq(x))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _permutation_kernel(x, n_permutations: int, key):
+    k, q = x.shape
+    obs = jnp.abs(paired_diff_means(x))  # [K, K]
+    signs = jax.random.rademacher(key, (n_permutations, q),
+                                  dtype=jnp.float32)
+    # Per-pair permuted mean difference = (s·x_i - s·x_j) / Q: computing the
+    # [K, P] projections first turns the naive O(K²·P·Q) contraction into
+    # O(K·P·Q + K²·P).
+    proj = x @ signs.T / q  # [K, P]
+    perm = jnp.abs(proj[:, None, :] - proj[None, :, :])  # [K, K, P]
+    ge = perm >= obs[..., None] * (1.0 - _TIE_RTOL) - 1e-12
+    count = jnp.sum(ge, axis=-1)
+    # add-one smoothing: the observed labelling is itself a permutation, so
+    # the Monte Carlo p-value is never 0 and never overstates significance
+    p = (count + 1.0) / (n_permutations + 1.0)
+    return _structure(p, 1.0)
+
+
+def paired_permutation_matrix(x, n_permutations: int = 2000,
+                              key: Optional[jax.Array] = None,
+                              seed: int = 0):
+    """All-pairs paired (sign-flip) permutation test p-values, ``[K, K]``.
+
+    The null hypothesis for pair ``(i, j)`` is that the per-query
+    differences are symmetric around 0; the test statistic is the absolute
+    mean difference under ``n_permutations`` random sign flips (one shared
+    sign matrix drives every pair, which is what lets the whole K×K grid
+    ride a single ``[K, P]`` projection).  Smallest reachable p-value is
+    ``1 / (n_permutations + 1)``; the diagonal is exactly 1.
+
+    >>> import numpy as np
+    >>> x = np.array([[0.9, 0.8, 0.7, 0.9, 0.8], [0.1, 0.2, 0.3, 0.1, 0.2]])
+    >>> p = paired_permutation_matrix(x, n_permutations=500)
+    >>> float(p[0, 0]), bool(p[0, 1] < 0.2), bool(p[0, 1] == p[1, 0])
+    (1.0, True, True)
+    """
+    x = _as_kq(x)
+    if n_permutations < 1:
+        raise ValueError(f"need n_permutations >= 1, got {n_permutations}")
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    return _permutation_kernel(x, int(n_permutations), key)
+
+
+@jax.jit
+def _exact_permutation_kernel(x):
+    k, q = x.shape
+    obs = jnp.abs(paired_diff_means(x))
+    n = 1 << q
+    # all 2^Q sign patterns, bit-decoded: row b is (+1/-1)^Q for bitmask b
+    bits = (jnp.arange(n, dtype=jnp.int32)[:, None]
+            >> jnp.arange(q, dtype=jnp.int32)[None, :]) & 1
+    signs = (bits * 2 - 1).astype(jnp.float32)
+    proj = x @ signs.T / q
+    perm = jnp.abs(proj[:, None, :] - proj[None, :, :])
+    ge = perm >= obs[..., None] * (1.0 - _TIE_RTOL) - 1e-12
+    # no smoothing: this IS the full null distribution (the identity
+    # pattern is one of the 2^Q, so the count is always >= 1)
+    return _structure(jnp.sum(ge, axis=-1) / n, 1.0)
+
+
+def paired_permutation_exact(x):
+    """Exact sign-flip permutation p-values by full 2^Q enumeration.
+
+    Only feasible for tiny query sets (``Q <= 20``); used as the ground
+    truth the Monte Carlo :func:`paired_permutation_matrix` is tested
+    against.
+
+    >>> import numpy as np
+    >>> p = paired_permutation_exact(np.array([[1.0, 2.0], [0.0, 0.0]]))
+    >>> np.asarray(p).tolist()  # 4 sign patterns, 2 reach |obs|
+    [[1.0, 0.5], [0.5, 1.0]]
+    """
+    x = _as_kq(x)
+    if x.shape[1] > EXACT_ENUMERATION_MAX_Q:
+        raise ValueError(
+            f"exact enumeration is 2^Q patterns; Q={x.shape[1]} exceeds "
+            f"the cap of {EXACT_ENUMERATION_MAX_Q}")
+    return _exact_permutation_kernel(x)
+
+
+def significance_report(x, *, tests: Sequence[str] = ("t",),
+                        n_permutations: int = 2000,
+                        seed: int = 0) -> Dict[str, np.ndarray]:
+    """The full comparison bundle for one ``[K, Q]`` score matrix.
+
+    Returns numpy host arrays (wire- and JSON-friendly):
+
+    * ``means`` — ``[K]`` per-system mean scores;
+    * ``diff`` — ``[K, K]`` mean paired differences;
+    * ``t``, ``p``, ``p_holm``, ``p_bonferroni`` — the paired t-test and
+      its corrected p-value matrices (always present);
+    * ``p_permutation``, ``p_permutation_holm``,
+      ``p_permutation_bonferroni`` — only when ``"permutation"`` is in
+      ``tests``.
+
+    ``tests`` entries must be ``"t"`` or ``"permutation"``; the t-test is
+    computed regardless (it is the cheap one that every caller prints).
+
+    >>> import numpy as np
+    >>> rep = significance_report(np.array([[1.0, 0.9, 0.8], [0.1, 0.2, 0.3]]))
+    >>> sorted(rep)
+    ['diff', 'means', 'p', 'p_bonferroni', 'p_holm', 't']
+    """
+    from repro.stats.corrections import bonferroni_matrix, holm_matrix
+
+    unknown = set(tests) - {"t", "permutation"}
+    if unknown:
+        raise ValueError(f"unknown significance tests: {sorted(unknown)} "
+                         "(expected 't' and/or 'permutation')")
+    x = _as_kq(x)
+    t, p = paired_t_matrix(x)
+    out = {
+        "means": np.asarray(jnp.mean(x, axis=1)),
+        "diff": np.asarray(paired_diff_means(x)),
+        "t": np.asarray(t),
+        "p": np.asarray(p),
+        "p_holm": np.asarray(holm_matrix(p)),
+        "p_bonferroni": np.asarray(bonferroni_matrix(p)),
+    }
+    if "permutation" in tests:
+        pp = paired_permutation_matrix(x, n_permutations=n_permutations,
+                                       seed=seed)
+        out["p_permutation"] = np.asarray(pp)
+        out["p_permutation_holm"] = np.asarray(holm_matrix(pp))
+        out["p_permutation_bonferroni"] = np.asarray(bonferroni_matrix(pp))
+    return out

@@ -1,0 +1,318 @@
+"""The ``compare`` surface: serve op, wire protocol, clients, and the CLI.
+
+One batched sweep + in-JAX significance tests, reachable three ways —
+``EvaluationService.compare`` (and its JSON-lines ``compare`` op),
+``EvalClient.compare`` over a real socket, and ``python -m repro.compare``
+— all of which must agree with :func:`repro.core.sweep.evaluate_sweep` +
+:mod:`repro.stats` computed directly.  The CLI output is golden
+byte-matched (``tests/fixtures/compare.golden``); the wire tests mirror the
+serve layer's standing regressions (>64 KiB frames, cancellation under
+``wait_for``) for the new op.
+"""
+
+import asyncio
+import io
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import compare as compare_cli
+from repro import stats
+from repro.core import RelevanceEvaluator, evaluate_sweep, trec
+from repro.data.synthetic_ir import synthesize_run
+from repro.serve import EvaluationService, MicroBatcher, handle_line
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+QREL = os.path.join(FIXTURES, "conformance.qrel")
+RUNS = [os.path.join(FIXTURES, f"{name}.run")
+        for name in ("conformance", "sweep_b", "sweep_c")]
+GOLDEN = os.path.join(FIXTURES, "compare.golden")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def collection():
+    run, qrel = synthesize_run(n_queries=12, n_docs=10, seed=3)
+    rng = np.random.default_rng(1)
+    runs = [{qid: {d: float(s + rng.normal()) for d, s in docs.items()}
+             for qid, docs in run.items()} for _ in range(4)]
+    return qrel, runs
+
+
+# -- service op ---------------------------------------------------------------
+
+
+def test_service_compare_matches_direct_sweep(collection):
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(window=0.05, backend="single")
+        svc.register_qrel("c", qrel, ("map", "ndcg"))
+        resp = await svc.compare("c", runs={"a": runs[0], "b": runs[1],
+                                            "c": runs[2]}, measure="ndcg")
+        return resp, svc.stats()
+
+    resp, served_stats = asyncio.run(main())
+    assert resp["run_names"] == ["a", "b", "c"]
+    assert resp["measure"] == "ndcg"
+    # the K per-run evaluations coalesced into ONE backend call
+    assert served_stats["backend_calls"] == 1
+    assert served_stats["in_flight"] == 0
+
+    result = evaluate_sweep(qrel, runs[:3], measures=("map", "ndcg"))
+    rep = stats.significance_report(
+        np.ascontiguousarray(result.measure("ndcg")))
+    assert resp["qids"] == list(result.qids)
+    for key in ("t", "p", "p_holm", "p_bonferroni", "diff", "means"):
+        assert np.asarray(resp[key]).tolist() == \
+            np.asarray(rep[key], dtype=float).tolist(), key
+    sig = np.asarray(resp["significant"])
+    holm = np.asarray(resp["p_holm"])
+    off = ~np.eye(3, dtype=bool)
+    assert np.array_equal(sig[off], holm[off] < resp["alpha"])
+    assert not sig.diagonal().any()
+
+
+def test_service_compare_run_refs_path(collection):
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(window=0.01, backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+        for i, r in enumerate(runs[:2]):
+            svc.register_run("c", f"sys{i}", run=r)
+        resp = await svc.compare("c", run_refs=["sys0", "sys1"])
+        with pytest.raises(KeyError, match="unknown run_ref"):
+            await svc.compare("c", run_refs=["sys0", "nope"])
+        return resp
+
+    resp = asyncio.run(main())
+    assert resp["run_names"] == ["sys0", "sys1"]
+    result = evaluate_sweep(qrel, runs[:2], measures=("map",))
+    rep = result.compare("map")
+    assert np.asarray(resp["p"]).tolist() == \
+        np.asarray(rep["p"], dtype=float).tolist()
+
+
+def test_service_compare_validation(collection):
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+        with pytest.raises(ValueError, match="exactly one"):
+            await svc.compare("c")
+        with pytest.raises(ValueError, match="exactly one"):
+            await svc.compare("c", runs=runs[:2], run_refs=["a", "b"])
+        with pytest.raises(ValueError, match=">= 2 runs"):
+            await svc.compare("c", runs=runs[:1])
+        with pytest.raises(ValueError, match="not computed"):
+            await svc.compare("c", runs=runs[:2], measure="ndcg")
+        with pytest.raises(KeyError, match="unknown qrel_id"):
+            await svc.compare("zzz", runs=runs[:2])
+        with pytest.raises(ValueError, match="no common judged"):
+            await svc.compare("c", runs=[runs[0], {"zz": {"d": 1.0}}])
+        with pytest.raises(ValueError, match="run_names for"):
+            await svc.compare("c", runs=runs[:3], run_names=["a"])
+
+    asyncio.run(main())
+
+
+def test_service_compare_cancelled_flush_does_not_hang(collection):
+    """PR 6 regression, mirrored for compare: a cancelled micro-batch flush
+    must propagate to the K gathered waiters instead of stranding the
+    request (and must release the single backpressure slot it held)."""
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(window=0.005, backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+
+        async def cancelled_flush(key, items):
+            raise asyncio.CancelledError()
+
+        svc._batcher = MicroBatcher(cancelled_flush, window=0.005)
+        with pytest.raises(asyncio.CancelledError):
+            await asyncio.wait_for(svc.compare("c", runs=runs[:3]),
+                                   timeout=5.0)
+        assert svc.stats()["in_flight"] == 0
+        # the slot came back: a healthy compare on a fresh batcher succeeds
+        svc._batcher = MicroBatcher(svc._flush, window=0.005)
+        resp = await asyncio.wait_for(svc.compare("c", runs=runs[:2]),
+                                      timeout=30.0)
+        assert resp["run_names"] == ["run_0", "run_1"]
+
+    asyncio.run(main())
+
+
+# -- wire protocol ------------------------------------------------------------
+
+
+def test_wire_compare_roundtrip_and_error_codes(collection):
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(window=0.01, backend="single")
+        out = {}
+        out["no_qrel_id"] = json.loads(await handle_line(
+            svc, json.dumps({"op": "compare", "id": 1})))
+        out["not_found"] = json.loads(await handle_line(svc, json.dumps(
+            {"op": "compare", "id": 2, "qrel_id": "zzz",
+             "runs": runs[:2]})))
+        svc.register_qrel("c", qrel, ("map",))
+        out["both"] = json.loads(await handle_line(svc, json.dumps(
+            {"op": "compare", "id": 3, "qrel_id": "c", "runs": runs[:2],
+             "run_refs": ["a", "b"]})))
+        out["bad_measure"] = json.loads(await handle_line(svc, json.dumps(
+            {"op": "compare", "id": 4, "qrel_id": "c", "runs": runs[:2],
+             "measure": "ndcg"})))
+        out["ok"] = json.loads(await handle_line(svc, json.dumps(
+            {"op": "compare", "id": 5, "qrel_id": "c",
+             "runs": {"a": runs[0], "b": runs[1]}})))
+        return out
+
+    out = asyncio.run(main())
+    assert not out["no_qrel_id"]["ok"]
+    assert out["no_qrel_id"]["code"] == "missing_field"
+    assert not out["not_found"]["ok"]
+    assert out["not_found"]["code"] == "not_found"
+    assert not out["both"]["ok"] and out["both"]["code"] == "invalid"
+    assert not out["bad_measure"]["ok"]
+    assert out["bad_measure"]["code"] == "invalid"
+    ok = out["ok"]
+    assert ok["ok"] and ok["id"] == 5
+    assert ok["result"]["run_names"] == ["a", "b"]
+    assert len(ok["result"]["p"]) == 2
+
+
+def test_wire_compare_serializes_infinite_t():
+    """A dominated pair has t = ±inf; the JSON-lines reply must carry it
+    (Python json emits the non-strict ``Infinity`` literal) and parse back
+    to the same float."""
+    qrel = trec.load_qrel(QREL)
+    run_a = trec.load_run(RUNS[0])
+    run_c = trec.load_run(RUNS[2])  # sweep_c dominates on every query
+
+    async def main():
+        svc = EvaluationService(window=0.01, backend="single")
+        svc.register_qrel("c", qrel, ("map",))
+        return json.loads(await handle_line(svc, json.dumps(
+            {"op": "compare", "id": 1, "qrel_id": "c",
+             "runs": {"a": run_a, "c": run_c}})))
+
+    resp = asyncio.run(main())
+    assert resp["ok"], resp
+    t = resp["result"]["t"]
+    assert t[0][1] == -float("inf") and t[1][0] == float("inf")
+    assert resp["result"]["p"][0][1] == 0.0
+    assert resp["result"]["significant"][0][1] is True
+
+
+# -- clients over a real socket (slow) ---------------------------------------
+
+
+@pytest.mark.slow
+def test_client_compare_large_frame_roundtrip(collection):
+    """EvalClient.compare with a >64 KiB request line (PR 4 regression,
+    extended to the new op) against direct sweep+stats values."""
+    from repro.client import EvalClient
+    from repro.serve.testing import ServerThread
+
+    big_qrel = {"Q%04d-%s" % (i, "x" * 120):
+                {"D%03d-%s" % (d, "y" * 120): int((i + d) % 2)
+                 for d in range(12)} for i in range(24)}
+    rng = np.random.default_rng(5)
+    big_runs = {f"sys{j}": {q: {d: float(s) for d, s in
+                                zip(docs, rng.random(len(docs)))}
+                            for q, docs in big_qrel.items()}
+                for j in range(2)}
+    line = json.dumps({"op": "compare", "qrel_id": "big",
+                       "runs": big_runs})
+    assert len(line) > (1 << 16)
+
+    with ServerThread(service_kw=dict(window=0.02)) as srv:
+        with EvalClient(srv.host, srv.port) as client:
+            client.register_qrel("big", big_qrel, ("map",))
+            resp = client.compare("big", runs=big_runs)
+        served = srv.stats()
+    assert resp["run_names"] == ["sys0", "sys1"]
+    result = evaluate_sweep(big_qrel, list(big_runs.values()),
+                            measures=("map",))
+    rep = stats.significance_report(np.ascontiguousarray(
+        result.measure("map")))
+    assert np.asarray(resp["p"]).tolist() == \
+        np.asarray(rep["p"], dtype=float).tolist()
+    assert served["backend_calls"] <= served["requests"]
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def _cli(argv):
+    buf = io.StringIO()
+    assert compare_cli.main(argv, out=buf) == 0
+    return buf.getvalue()
+
+
+def _golden_text():
+    with open(GOLDEN, newline="") as fh:
+        return fh.read()
+
+
+def test_compare_cli_byte_matches_golden():
+    assert _cli([QREL] + RUNS) == _golden_text()
+
+
+@pytest.mark.slow
+def test_python_dash_m_repro_compare_byte_matches_golden():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.compare", QREL] + RUNS,
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout == _golden_text()
+
+
+def test_compare_cli_golden_matches_direct_stats():
+    """Every pair line in the golden re-derived from sweep + stats."""
+    qrel = trec.load_qrel(QREL)
+    runs = [trec.load_run(p) for p in RUNS]
+    result = evaluate_sweep(qrel, runs, measures=("map",),
+                            run_names=["conformance", "sweep_b", "sweep_c"])
+    rep = result.compare("map")
+    pair_lines = [l for l in _golden_text().splitlines()
+                  if l.startswith("pair\t")]
+    idx = {name: i for i, name in enumerate(result.run_names)}
+    assert len(pair_lines) == 3
+    for line in pair_lines:
+        cells = line.split("\t")
+        a, b = cells[1].split(":")
+        i, j = idx[a], idx[b]
+        assert cells[2] == f"diff={float(rep['diff'][i, j]):+.4f}"
+        assert cells[3] == f"t={float(rep['t'][i, j]):+.4f}"
+        assert cells[4] == f"p={float(rep['p'][i, j]):.4f}"
+        assert cells[5] == f"p_holm={float(rep['p_holm'][i, j]):.4f}"
+        starred = cells[-1] == "*"
+        assert starred == (float(rep["p_holm"][i, j]) < 0.05), line
+
+
+def test_compare_cli_repeated_measures_and_permutation():
+    out = _cli(["-m", "map", "-m", "ndcg", "--test", "both",
+                "--permutations", "200", QREL] + RUNS)
+    blocks = [l for l in out.splitlines() if l.startswith("measure\t")]
+    assert blocks == ["measure\tall\tmap", "measure\tall\tndcg"]
+    pair_lines = [l for l in out.splitlines() if l.startswith("pair\t")]
+    assert len(pair_lines) == 6  # 3 pairs x 2 measures
+    assert all("p_perm=" in l and "p_perm_holm=" in l for l in pair_lines)
+
+
+def test_compare_cli_errors():
+    with pytest.raises(SystemExit):
+        compare_cli.main([QREL, RUNS[0]])  # one run is not a comparison
+    with pytest.raises(SystemExit):
+        compare_cli.main(["-m", "nosuch", QREL] + RUNS)

@@ -20,7 +20,8 @@ def _python_blocks(path):
 
 
 @pytest.mark.parametrize("path", ["README.md", "docs/ARCHITECTURE.md",
-                                  "docs/SERVING.md", "docs/CONFORMANCE.md"])
+                                  "docs/SERVING.md", "docs/CONFORMANCE.md",
+                                  "docs/EXPERIMENTS.md"])
 def test_doc_code_blocks_run(path):
     blocks = _python_blocks(path)
     assert blocks, f"{path} has no python blocks?"
@@ -48,6 +49,10 @@ def test_doc_code_blocks_run(path):
     "repro.kernels.ops",
     "repro.kernels.bucketing",
     "repro.kernels.autotune",
+    "repro.stats",
+    "repro.stats.significance",
+    "repro.stats.corrections",
+    "repro.core.sweep",
 ])
 def test_docstring_examples(module_name):
     import importlib

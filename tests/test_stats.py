@@ -1,0 +1,246 @@
+"""Conformance tests for :mod:`repro.stats` — the in-JAX significance stack.
+
+Three layers of evidence, so a numerical regression cannot hide:
+
+1. **Hand-computed fixtures** at degrees of freedom where the t
+   distribution has a closed form (df=1 is Cauchy, df=3 is elementary),
+   checked to 1e-6.
+2. **scipy cross-checks** on random data (skipped when scipy is absent);
+   float32 ``betainc`` drifts with df, so random-data tolerances are
+   looser than the fixture tolerances.
+3. **Structural properties** that hold for every input: antisymmetric
+   zero-diagonal t, symmetric unit-diagonal p, Holm <= Bonferroni <= 1,
+   Monte-Carlo permutation p within a CI-style bound of the exact
+   enumeration.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import stats
+
+# two runs over two queries whose per-query difference is d = [0.1, 0.3]:
+# mean 0.2, sd 0.1*sqrt(2), t = 2 at df = 1 (Cauchy), so the two-sided
+# p-value has the closed form 1 - (2/pi) * atan(|t|).
+X_DF1 = np.array([[0.4, 0.6], [0.3, 0.3]], dtype=np.float32)
+T_DF1 = 2.0
+P_DF1 = 1.0 - (2.0 / math.pi) * math.atan(2.0)  # 0.29516723...
+
+# d = [0.1, 0.2, 0.3, 0.4]: mean 0.25, t = sqrt(15) at df = 3, where
+# P(|T| > t) = 1 - 2/pi * (atan(u) + u/(1+u^2)) with u = t/sqrt(3).
+X_DF3 = np.array([[0.2, 0.4, 0.6, 0.8], [0.1, 0.2, 0.3, 0.4]],
+                 dtype=np.float32)
+T_DF3 = math.sqrt(15.0)
+_u = T_DF3 / math.sqrt(3.0)
+P_DF3 = 1.0 - (2.0 / math.pi) * (math.atan(_u) + _u / (1.0 + _u * _u))
+
+
+def _rand(k, q, seed=0):
+    return np.random.default_rng(seed).random((k, q)).astype(np.float32)
+
+
+# -- hand-computed fixtures ---------------------------------------------------
+
+
+def test_t_matrix_df1_closed_form():
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(X_DF1))
+    assert abs(float(t[0, 1]) - T_DF1) < 1e-6
+    assert abs(float(p[0, 1]) - P_DF1) < 1e-6
+    assert float(t[1, 0]) == -float(t[0, 1])
+    assert float(p[1, 0]) == float(p[0, 1])
+
+
+def test_t_matrix_df3_closed_form():
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(X_DF3))
+    assert abs(float(t[0, 1]) - T_DF3) < 1e-5
+    assert abs(float(p[0, 1]) - P_DF3) < 1e-6
+
+
+def test_diff_means_fixture():
+    d = np.asarray(stats.paired_diff_means(X_DF1))
+    assert d[0, 1] == pytest.approx(0.2, abs=1e-7)
+    assert d[1, 0] == pytest.approx(-0.2, abs=1e-7)
+    assert d[0, 0] == d[1, 1] == 0.0
+
+
+def test_exact_permutation_df1():
+    # Q=2 -> 4 sign patterns; |mean| of [.1,.3] flips: {.2,.1,.1,.2} so
+    # every pattern ties-or-beats the observed |.2| except the two at .1:
+    # p = 2/4.
+    p = np.asarray(stats.paired_permutation_exact(X_DF1))
+    assert float(p[0, 1]) == pytest.approx(0.5, abs=1e-7)
+
+
+def test_holm_and_bonferroni_hand_example():
+    # classic three-hypothesis example: raw (0.01, 0.04, 0.03)
+    p = np.ones((3, 3), dtype=np.float32)
+    p[0, 1] = p[1, 0] = 0.01
+    p[0, 2] = p[2, 0] = 0.04
+    p[1, 2] = p[2, 1] = 0.03
+    holm = np.asarray(stats.holm_matrix(p))
+    bonf = np.asarray(stats.bonferroni_matrix(p))
+    assert holm[0, 1] == pytest.approx(0.03, abs=1e-7)   # 0.01 * 3
+    assert holm[1, 2] == pytest.approx(0.06, abs=1e-7)   # 0.03 * 2
+    assert holm[0, 2] == pytest.approx(0.06, abs=1e-7)   # monotone step-down
+    assert bonf[0, 1] == pytest.approx(0.03, abs=1e-7)
+    assert bonf[0, 2] == pytest.approx(0.12, abs=1e-7)
+    assert bonf[1, 2] == pytest.approx(0.09, abs=1e-7)
+    for m in (holm, bonf):
+        assert np.array_equal(np.diag(m), np.ones(3))
+        assert np.array_equal(m, m.T)
+
+
+# -- degenerate inputs --------------------------------------------------------
+
+
+def test_identical_runs_give_t_zero_p_one():
+    x = np.tile(_rand(1, 8), (3, 1))
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+    assert np.array_equal(t, np.zeros((3, 3)))
+    assert np.array_equal(p, np.ones((3, 3)))
+
+
+def test_constant_nonzero_diff_gives_infinite_t():
+    # values exactly representable in float32 so the per-query difference
+    # is EXACTLY constant (se = 0) rather than constant-up-to-rounding
+    base = np.array([0.25, 0.5, 0.75, 0.0, 0.25, 0.5], dtype=np.float32)
+    x = np.stack([base, base + 0.5]).astype(np.float32)
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+    assert t[0, 1] == -np.inf and t[1, 0] == np.inf
+    assert p[0, 1] == 0.0 and p[1, 0] == 0.0
+
+
+def test_input_validation():
+    with pytest.raises(ValueError):
+        stats.paired_t_matrix(np.zeros(4, np.float32))  # 1-D
+    with pytest.raises(ValueError):
+        stats.paired_t_matrix(np.zeros((3, 1), np.float32))  # Q < 2
+    with pytest.raises(ValueError):
+        stats.paired_permutation_exact(
+            np.zeros((2, stats.EXACT_ENUMERATION_MAX_Q + 1), np.float32))
+    with pytest.raises(ValueError):
+        stats.significance_report(X_DF1, tests=("wilcoxon",))
+
+
+# -- structural properties on random data ------------------------------------
+
+
+@pytest.mark.parametrize("k,q,seed", [(3, 5, 0), (6, 12, 1), (9, 40, 2)])
+def test_t_and_p_matrix_structure(k, q, seed):
+    x = _rand(k, q, seed)
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+    assert np.array_equal(t, -t.T)
+    assert np.array_equal(np.diag(t), np.zeros(k))
+    assert np.array_equal(p, p.T)
+    assert np.array_equal(np.diag(p), np.ones(k))
+    assert ((p >= 0) & (p <= 1)).all()
+
+
+@pytest.mark.parametrize("k,q,seed", [(4, 8, 3), (7, 25, 4)])
+def test_holm_between_raw_and_bonferroni(k, q, seed):
+    _, p = stats.paired_t_matrix(_rand(k, q, seed))
+    p = np.asarray(p)
+    holm = np.asarray(stats.holm_matrix(p))
+    bonf = np.asarray(stats.bonferroni_matrix(p))
+    off = ~np.eye(k, dtype=bool)
+    assert (holm[off] >= p[off] - 1e-7).all()
+    assert (holm[off] <= bonf[off] + 1e-7).all()
+    assert (holm <= 1.0).all() and (bonf <= 1.0).all()
+    assert np.array_equal(holm, holm.T)
+
+
+def test_permutation_matrix_structure():
+    p = np.asarray(stats.paired_permutation_matrix(_rand(5, 10, 7),
+                                                   n_permutations=500))
+    assert np.array_equal(p, p.T)
+    assert np.array_equal(np.diag(p), np.ones(5))
+    assert ((p > 0) & (p <= 1)).all()  # add-one MC estimate is never 0
+
+
+def test_permutation_seed_determinism():
+    x = _rand(4, 9, 8)
+    a = np.asarray(stats.paired_permutation_matrix(x, seed=3))
+    b = np.asarray(stats.paired_permutation_matrix(x, seed=3))
+    c = np.asarray(stats.paired_permutation_matrix(x, seed=4))
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_mc_permutation_within_ci_of_exact():
+    """(count+1)/(P+1) must land within a binomial CI of the exact p."""
+    x = _rand(4, 10, seed=11)
+    n_perm = 4000
+    exact = np.asarray(stats.paired_permutation_exact(x))
+    mc = np.asarray(stats.paired_permutation_matrix(
+        x, n_permutations=n_perm, seed=5))
+    for i in range(4):
+        for j in range(i + 1, 4):
+            pe = float(exact[i, j])
+            bound = 3.5 * math.sqrt(pe * (1 - pe) / n_perm) + 2 / (n_perm + 1)
+            assert abs(float(mc[i, j]) - pe) <= bound, (i, j, pe, mc[i, j])
+
+
+# -- significance_report ------------------------------------------------------
+
+
+def test_significance_report_keys_and_consistency():
+    x = _rand(3, 7, seed=6)
+    rep = stats.significance_report(x, tests=("t", "permutation"),
+                                    n_permutations=300, seed=1)
+    for key in ("means", "diff", "t", "p", "p_holm", "p_bonferroni",
+                "p_permutation", "p_permutation_holm",
+                "p_permutation_bonferroni"):
+        assert key in rep, key
+        assert isinstance(rep[key], np.ndarray)
+    assert rep["means"].shape == (3,)
+    assert np.allclose(rep["means"], x.mean(axis=1), atol=1e-6)
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+    assert np.array_equal(rep["t"], t)
+    assert np.array_equal(rep["p"], p)
+    assert np.array_equal(rep["p_holm"], np.asarray(stats.holm_matrix(p)))
+    rep_t = stats.significance_report(x)
+    assert "p_permutation" not in rep_t
+
+
+# -- scipy cross-checks (skipped when scipy is not installed) ----------------
+
+
+def test_t_matrix_matches_scipy():
+    sps = pytest.importorskip("scipy.stats")
+    x = _rand(8, 40, seed=9)
+    t, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+    for i in range(8):
+        for j in range(i + 1, 8):
+            ref = sps.ttest_rel(x[i], x[j])
+            assert abs(float(t[i, j]) - ref.statistic) < 1e-4
+            # float32 betainc error grows with df; 2.4e-5 observed at df=39
+            assert abs(float(p[i, j]) - ref.pvalue) < 1e-4
+
+
+def test_fixtures_match_scipy_to_1e6():
+    sps = pytest.importorskip("scipy.stats")
+    for x in (X_DF1, X_DF3):
+        _, p = (np.asarray(a) for a in stats.paired_t_matrix(x))
+        ref = sps.ttest_rel(x[0], x[1])
+        assert abs(float(p[0, 1]) - ref.pvalue) < 1e-6
+
+
+def test_holm_matches_scipy_false_discovery_control():
+    sps = pytest.importorskip("scipy.stats")
+    if not hasattr(sps, "false_discovery_control"):
+        pytest.skip("scipy too old for false_discovery_control")
+    # scipy has no paired Holm-over-matrix helper; cross-check our Holm
+    # against statsmodels-style manual step-down on the flat vector.
+    _, p = stats.paired_t_matrix(_rand(6, 15, seed=10))
+    p = np.asarray(p)
+    iu = np.triu_indices(6, 1)
+    flat = p[iu]
+    order = np.argsort(flat)
+    m = len(flat)
+    ref = np.empty_like(flat)
+    ref[order] = np.minimum(
+        np.maximum.accumulate(flat[order] * (m - np.arange(m))), 1.0)
+    holm = np.asarray(stats.holm_matrix(p))
+    assert np.allclose(holm[iu], ref, atol=1e-7)
