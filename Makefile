@@ -1,11 +1,13 @@
 # Convenience targets; `make verify` is the documented pre-merge check
 # (tier-1 pytest + a 2-device sharded smoke test + the serve smoke test
-# + the client smoke test + the sweep/statistics smoke test).
+# + the client smoke test + the cluster smoke test + the sweep/statistics
+# smoke test).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify serve-smoke client-smoke sweep-smoke test test-all bench
+.PHONY: verify serve-smoke client-smoke cluster-smoke sweep-smoke \
+	test test-all bench
 
 verify:
 	$(PYTHON) -m repro.dev verify
@@ -15,6 +17,9 @@ serve-smoke:
 
 client-smoke:
 	$(PYTHON) -m repro.dev client-smoke
+
+cluster-smoke:
+	$(PYTHON) -m repro.dev cluster-smoke
 
 sweep-smoke:
 	$(PYTHON) -m repro.dev sweep-smoke

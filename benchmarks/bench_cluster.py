@@ -1,0 +1,159 @@
+"""Cluster segment: multi-worker scale-out vs the single-process plateau.
+
+``bench_serve``/``bench_client`` top out around the single asyncio loop +
+GIL of one ``repro.serve`` process (~415 runs/s on the reference host).
+This segment measures what the consistent-hash router buys: the SAME
+multi-collection workload driven through
+
+* **single** — one in-process ``serve_tcp`` endpoint (the plateau), and
+* **cluster** — ``repro.serve.cluster`` at 1, 2, and 4 workers (8 with
+  ``--full``), collections spread across the ring so every worker's
+  micro-batcher coalesces its own share of the traffic.
+
+Rows report sustained ``runs_per_s``, client-observed p50/p99, and
+``speedup_vs_single``.  Honesty matters here: worker processes only help
+when there are cores to run them on, so every row also carries
+``host_cpus`` (``os.cpu_count()``).  On a 1-core host the cluster rows
+measure routing overhead, not scale-out — expect speedups < 1; on an
+N-core host the 4-worker row is where the >= 2x aggregate-throughput
+claim is checked.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+#: cluster sizes measured (the paper-scale run adds 8)
+WORKER_COUNTS = (1, 2, 4)
+WORKER_COUNTS_FULL = (1, 2, 4, 8)
+
+MEASURES = ("map", "ndcg", "recip_rank")
+DEPTH = 16  # pipelined requests kept in flight by the driver
+
+
+def _percentiles(latencies: List[float]) -> Dict[str, float]:
+    return {
+        "p50_ms": 1e3 * float(np.quantile(latencies, 0.5)),
+        "p99_ms": 1e3 * float(np.quantile(latencies, 0.99)),
+    }
+
+
+def _make_workload(n_collections: int, n_queries: int, n_docs: int,
+                   n_score_sets: int):
+    """Per-collection qrel/run pairs + pre-listified score sets."""
+    from repro.core import RelevanceEvaluator
+    from repro.data.synthetic_ir import synthesize_run
+
+    workload = {}
+    rng = np.random.default_rng(0)
+    for c in range(n_collections):
+        cid = f"col{c}"
+        run, qrel = synthesize_run(n_queries, n_docs, seed=c)
+        n_scores = int(RelevanceEvaluator(qrel, ("map",))
+                       .tokenize_run(run).qidx.shape[0])
+        scores = [rng.normal(size=n_scores).astype(np.float32).tolist()
+                  for _ in range(n_score_sets)]
+        workload[cid] = {"qrel": qrel, "run": run, "scores": scores}
+    return workload
+
+
+def _register(host: str, port: int, workload) -> None:
+    from repro.client import EvalClient
+
+    with EvalClient(host, port) as client:
+        for cid, spec in workload.items():
+            client.register_qrel(cid, spec["qrel"], MEASURES)
+            client.register_run(cid, "r", run=spec["run"])
+
+
+async def _drive(host: str, port: int, workload, requests: int,
+                 depth: int = DEPTH):
+    """One pipelined client, round-robin over the collections."""
+    from repro.client import AsyncEvalClient
+
+    cids = list(workload)
+    client = await AsyncEvalClient.connect(host, port)
+    for cid in cids:  # warm every collection's compile/cache path
+        await client.evaluate(cid, run_ref="r",
+                              scores=workload[cid]["scores"][0])
+    latencies: List[float] = []
+    done = 0
+
+    async def worker(w: int) -> None:
+        nonlocal done
+        k = w
+        while done < requests:
+            spec = workload[cids[k % len(cids)]]
+            scores = spec["scores"][k % len(spec["scores"])]
+            t0 = time.perf_counter()
+            await client.evaluate(cids[k % len(cids)], run_ref="r",
+                                  scores=scores)
+            latencies.append(time.perf_counter() - t0)
+            done += 1
+            k += depth
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*(worker(w) for w in range(depth)))
+    wall = time.perf_counter() - t0
+    await client.aclose()
+    return latencies, wall
+
+
+def _row(mode: str, workers: int, latencies: List[float],
+         wall: float) -> Dict:
+    row = {"mode": mode, "workers": workers, "depth": DEPTH,
+           "requests": len(latencies), "runs_per_s": len(latencies) / wall,
+           "host_cpus": os.cpu_count()}
+    row.update(_percentiles(latencies))
+    print(f"cluster {mode} workers={workers}: "
+          f"{row['runs_per_s']:.1f} runs/s, p50 {row['p50_ms']:.1f}ms, "
+          f"p99 {row['p99_ms']:.1f}ms")
+    return row
+
+
+def run(full: bool = False) -> List[Dict]:
+    from repro.serve.cluster.testing import ClusterThread
+    from repro.serve.testing import ServerThread
+
+    n_collections = 8 if full else 6
+    n_queries, n_docs = (128, 64) if full else (48, 24)
+    requests = 480 if full else 160
+    counts = WORKER_COUNTS_FULL if full else WORKER_COUNTS
+
+    workload = _make_workload(n_collections, n_queries, n_docs,
+                              n_score_sets=8)
+    worker_args = ["--backend", "single", "--window-ms", "2",
+                   "--max-batch", "64"]
+    rows: List[Dict] = []
+
+    # the single-process plateau, same workload, same pipelining
+    with ServerThread(service_kw=dict(window=0.002, max_batch=64,
+                                      backend="single",
+                                      max_collections=n_collections)) as srv:
+        _register(srv.host, srv.port, workload)
+        latencies, wall = asyncio.run(_drive(srv.host, srv.port, workload,
+                                             requests))
+        rows.append(_row("single", 0, latencies, wall))
+    baseline = rows[0]["runs_per_s"]
+
+    for n in counts:
+        with ClusterThread(n, worker_args=worker_args
+                           + ["--max-collections", str(n_collections)],
+                           router_kw=dict(health_interval=5.0)) as cluster:
+            _register(cluster.host, cluster.port, workload)
+            latencies, wall = asyncio.run(_drive(
+                cluster.host, cluster.port, workload, requests))
+            stats = cluster.stats()
+        row = _row("cluster", n, latencies, wall)
+        row["speedup_vs_single"] = row["runs_per_s"] / baseline
+        row["forwarded"] = stats["router"]["forwarded"]
+        rows.append(row)
+        print(f"  speedup vs single-process: "
+              f"{row['speedup_vs_single']:.2f}x "
+              f"({row['host_cpus']} host cpu(s))")
+    return rows

@@ -22,6 +22,10 @@ Segments (repeat ``--only`` to pick several):
 * ``client``    — the same serving hot path measured END TO END through a
   real TCP socket and ``repro.client``: a raw-socket lockstep baseline vs
   ``AsyncEvalClient`` pipelining at several depths; see ``bench_client``.
+* ``cluster``   — multi-worker scale-out (``repro.serve.cluster``): the
+  same multi-collection workload through one in-process server vs the
+  consistent-hash router at 1/2/4 workers (8 under ``--full``), with
+  ``speedup_vs_single`` and the host core count; see ``bench_cluster``.
 * ``qlearning`` — the paper's RL demo, episodes/s.
 * ``batched``   — dense batched evaluation vs the dict API.
 * ``sweep``     — K-run sweep evaluation (``evaluate_sweep``) vs K
@@ -50,6 +54,7 @@ SEGMENTS = {
     "sharded": "bench_sharded.run",
     "serve": "bench_serve.run",
     "client": "bench_client.run",
+    "cluster": "bench_cluster.run",
     "qlearning": "bench_qlearning.run",
     "batched": "bench_batched.run",
     "sweep": "bench_sweep.run",
@@ -68,6 +73,7 @@ def main(argv=None) -> None:
                          "accounting, sharded = multi-device scaling, "
                          "serve = async service throughput/latency, "
                          "client = TCP client library end to end, "
+                         "cluster = multi-worker router scale-out, "
                          "qlearning = RL demo, batched = dense batched "
                          "eval, sweep = K-run sweep + significance stats")
     ap.add_argument("--list", action="store_true",
@@ -79,16 +85,16 @@ def main(argv=None) -> None:
             print(name)
         return
 
-    from benchmarks import bench_batched, bench_client, bench_kernels, \
-        bench_qlearning, bench_rq1, bench_rq2, bench_serve, bench_sharded, \
-        bench_sweep
+    from benchmarks import bench_batched, bench_client, bench_cluster, \
+        bench_kernels, bench_qlearning, bench_rq1, bench_rq2, bench_serve, \
+        bench_sharded, bench_sweep
 
     modules = {
         "bench_batched": bench_batched, "bench_client": bench_client,
-        "bench_kernels": bench_kernels, "bench_qlearning": bench_qlearning,
-        "bench_rq1": bench_rq1, "bench_rq2": bench_rq2,
-        "bench_serve": bench_serve, "bench_sharded": bench_sharded,
-        "bench_sweep": bench_sweep,
+        "bench_cluster": bench_cluster, "bench_kernels": bench_kernels,
+        "bench_qlearning": bench_qlearning, "bench_rq1": bench_rq1,
+        "bench_rq2": bench_rq2, "bench_serve": bench_serve,
+        "bench_sharded": bench_sharded, "bench_sweep": bench_sweep,
     }
     suites = {}
     for name, ref in SEGMENTS.items():
@@ -150,6 +156,12 @@ def main(argv=None) -> None:
         print(f"client_{row['mode']}_d{row['depth']},"
               f"{1e6 / row['runs_per_s']:.1f},"
               f"p99_ms={row['p99_ms']:.1f}")
+    for row in results.get("cluster", []):
+        sp = row.get("speedup_vs_single")
+        sp_str = f"{sp:.2f}" if sp is not None else "nan"
+        print(f"cluster_{row['mode']}_w{row['workers']},"
+              f"{1e6 / row['runs_per_s']:.1f},"
+              f"speedup={sp_str}")
     for row in results.get("qlearning", []):
         print(f"qlearning,{1e6 / row['episodes_per_s']:.1f},"
               f"tail_reward={row['tail_avg_reward']:+.4f}")

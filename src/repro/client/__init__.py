@@ -35,7 +35,7 @@ qrel/run payloads are first-class, not a crash).
 from repro.client.aio import AsyncEvalClient, EvalResult, IDEMPOTENT_OPS
 from repro.client.errors import (AuthError, ClientError,
                                  ConnectionLostError, ProtocolError,
-                                 ServerError)
+                                 ServerError, WorkerUnavailableError)
 from repro.client.sync import EvalClient
 
 __all__ = [
@@ -48,4 +48,5 @@ __all__ = [
     "AuthError",
     "ConnectionLostError",
     "ProtocolError",
+    "WorkerUnavailableError",
 ]

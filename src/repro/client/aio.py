@@ -41,8 +41,9 @@ from __future__ import annotations
 import asyncio
 import contextlib
 import json
+import re
 import sys
-from typing import Dict, List, NamedTuple, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,8 +56,15 @@ from repro.serve.wire import DEFAULT_FRAME_LIMIT
 #: not idempotent (a retry of a delivered drop reports ``dropped: false``).
 IDEMPOTENT_OPS = frozenset({
     "register_qrel", "register_run", "evaluate", "compare", "stats", "ping",
-    "auth",
+    "health", "auth",
 })
+
+#: ``repro.serve`` front-ends build responses as ``{"id": rid, ...}`` and
+#: ``json.dumps`` preserves dict insertion order, so every correlatable
+#: response line starts with its id.  Matching it here lets the read loop
+#: resolve :meth:`AsyncEvalClient.forward` waiters without parsing the
+#: (possibly multi-megabyte) body — the cluster router's fan-out path.
+_ID_PREFIX = re.compile(rb'^\{"id":\s*(-?\d+)\s*,')
 
 
 class EvalResult(NamedTuple):
@@ -109,7 +117,9 @@ class AsyncEvalClient:
         self._reader_task: Optional[asyncio.Task] = None
         self._proc = None  # stdio transport: the server subprocess
         self._conn_lock = asyncio.Lock()
-        self._pending: Dict[int, asyncio.Future] = {}
+        # rid -> (future, raw): `raw` waiters (forward()) get the response
+        # line as bytes, everyone else the parsed object
+        self._pending: Dict[int, Tuple[asyncio.Future, bool]] = {}
         self._next_id = 0
         self._closed = False
         #: client-side counters: requests sent, retries, reconnects
@@ -193,11 +203,14 @@ class AsyncEvalClient:
 
     async def _read_loop(self, reader: asyncio.StreamReader,
                          writer: asyncio.StreamWriter,
-                         pending: Dict[int, asyncio.Future]) -> None:
+                         pending: Dict[int, Tuple[asyncio.Future, bool]],
+                         ) -> None:
         """Resolve responses to their waiting futures by request id.
 
         ``pending`` is THIS connection generation's future map — a dying
         loop must never touch futures registered on a successor connection.
+        Lines whose id prefix matches a ``raw`` waiter are handed over as
+        bytes without JSON-parsing the body (:meth:`forward`).
         """
         exc: ClientError = ConnectionLostError("connection closed by server")
         try:
@@ -205,6 +218,15 @@ class AsyncEvalClient:
                 line = await reader.readline()
                 if not line:
                     break
+                m = _ID_PREFIX.match(line)
+                if m is not None:
+                    ent = pending.pop(int(m.group(1)), None)
+                    if ent is not None and ent[1]:  # raw waiter: no parse
+                        if not ent[0].done():
+                            ent[0].set_result(line.rstrip(b"\r\n"))
+                        continue
+                else:
+                    ent = None
                 try:
                     msg = json.loads(line)
                     if not isinstance(msg, dict):
@@ -213,7 +235,11 @@ class AsyncEvalClient:
                     raise ProtocolError(
                         f"bad response line from server: {e}: "
                         f"{line[:120]!r}") from e
-                self._dispatch(msg, pending)
+                if ent is not None:
+                    if not ent[0].done():
+                        ent[0].set_result(msg)
+                else:
+                    self._dispatch(msg, pending)
         except (ConnectionError, OSError, asyncio.IncompleteReadError) as e:
             exc = ConnectionLostError(f"connection lost: {e}")
         except ValueError as e:  # response line over the reader's limit
@@ -229,21 +255,24 @@ class AsyncEvalClient:
             with contextlib.suppress(ConnectionError, OSError,
                                      RuntimeError):
                 writer.close()
-            for fut in pending.values():
+            for fut, _raw in pending.values():
                 if not fut.done():
                     fut.set_exception(exc)
             pending.clear()
 
     @staticmethod
-    def _dispatch(msg: dict, pending: Dict[int, asyncio.Future]) -> None:
+    def _dispatch(msg: dict,
+                  pending: Dict[int, Tuple[asyncio.Future, bool]]) -> None:
         rid = msg.get("id")
-        fut = pending.pop(rid, None) if rid is not None else None
-        if fut is None and rid is None and len(pending) == 1:
+        ent = pending.pop(rid, None) if rid is not None else None
+        if ent is None and rid is None and len(pending) == 1:
             # the server could not read an id (e.g. frame_too_large); with
             # exactly one request outstanding the correlation is unambiguous
-            _, fut = pending.popitem()
-        if fut is not None and not fut.done():
-            fut.set_result(msg)
+            _, ent = pending.popitem()
+        if ent is not None and not ent[0].done():
+            # a raw waiter resolved here (null-id error path) gets the
+            # parsed object; forward() re-encodes that rare case
+            ent[0].set_result(msg)
         # anything else: an unsolicited/late line — drop it
 
     async def _auth(self) -> None:
@@ -264,7 +293,7 @@ class AsyncEvalClient:
                 f"--max-frame-mb on the server")
         fut = asyncio.get_running_loop().create_future()
         pending = self._pending  # this connection generation's map
-        pending[rid] = fut
+        pending[rid] = (fut, False)
         self.transport_stats["requests"] += 1
         try:
             self._writer.write(data)
@@ -306,10 +335,60 @@ class AsyncEvalClient:
                 continue
             return self._check(resp)
 
+    async def forward(self, frame: bytes) -> bytes:
+        """Relay a pre-encoded request frame; return the raw response frame.
+
+        This is the cluster router's hot path: the router has already
+        parsed the client's request line (it needed ``op`` and ``qrel_id``
+        to route it), so re-encoding the — possibly multi-megabyte — run
+        payload just to send it on would double the serialization bill.
+        Instead the original frame is forwarded verbatim with a fresh
+        connection-local id *appended* before the closing brace; JSON
+        object keys are last-one-wins on decode, so the spliced id shadows
+        the client's without rewriting the body.  The response comes back
+        as bytes, still carrying the spliced id (callers rewrite it; see
+        ``repro.serve.cluster.router``), and is matched to its waiter by
+        the id *prefix* of the line — no JSON parse on either direction.
+
+        One attempt, no retry: the router owns retry policy (it knows
+        which ops are idempotent).  Raises :class:`ConnectionLostError`
+        (a ``ConnectionError``) if the transport dies first.
+        """
+        frame = frame.strip()
+        if not frame.endswith(b"}"):
+            raise ClientError(
+                f"forward() needs one JSON object frame, got {frame[:80]!r}")
+        await self._ensure_connected()
+        rid = self._next_id
+        self._next_id += 1
+        data = b'%s,"id":%d}\n' % (frame[:-1], rid)
+        if len(data) > self._frame_limit:
+            raise ClientError(
+                f"request is {len(data)} bytes but the frame limit is "
+                f"{self._frame_limit}; raise frame_limit= here and "
+                f"--max-frame-mb on the server")
+        fut = asyncio.get_running_loop().create_future()
+        pending = self._pending
+        pending[rid] = (fut, True)
+        self.transport_stats["requests"] += 1
+        try:
+            self._writer.write(data)
+            await self._writer.drain()
+            resp = await fut
+        finally:
+            pending.pop(rid, None)
+        if isinstance(resp, dict):  # null-id error line, resolved parsed
+            return json.dumps(resp).encode()
+        return resp
+
     # -- session-API mirror --------------------------------------------------
 
     async def ping(self) -> str:
         return await self._request("ping")
+
+    async def health(self) -> dict:
+        """The server's cheap liveness probe (``status``, ``in_flight``)."""
+        return await self._request("health")
 
     async def stats(self) -> dict:
         """Server-side counters (coalescing, cache, backpressure)."""

@@ -6,7 +6,10 @@ Three failure families, matching what a caller can actually do about them:
   was *delivered and rejected*; retrying the same bytes will fail the same
   way.  Carries the machine-readable ``code``
   (:data:`repro.serve.wire.ERROR_CODES`) and the echoed request id.
-  :class:`AuthError` is the ``auth_required`` / ``bad_auth`` subset.
+  :class:`AuthError` is the ``auth_required`` / ``bad_auth`` subset;
+  :class:`WorkerUnavailableError` is the cluster router's
+  ``worker_unavailable`` (the owning worker is down and the router will
+  not retry on the caller's behalf).
 * :class:`ConnectionLostError` — the transport died before a response
   arrived.  Idempotent requests are retried automatically
   (:class:`~repro.client.aio.AsyncEvalClient`); this surfaces only once
@@ -45,6 +48,17 @@ class AuthError(ServerError):
     """Authentication failed (``auth_required`` or ``bad_auth``)."""
 
 
+class WorkerUnavailableError(ServerError):
+    """A cluster router could not reach the worker owning this request.
+
+    Raised only for requests the router will NOT transparently retry
+    (``drop_qrel``, or idempotent ops once the router's retry budget is
+    exhausted).  The request may or may not have executed — the caller
+    decides whether re-sending is safe, which is exactly why the code is
+    machine-readable instead of being folded into ``internal``.
+    """
+
+
 class ConnectionLostError(ClientError, ConnectionError):
     """The connection dropped before this request's response arrived."""
 
@@ -61,5 +75,10 @@ def error_from_response(resp: dict) -> ServerError:
     """Build the right exception for an ``ok: false`` response object."""
     code = resp.get("code") or "internal"
     message = str(resp.get("error", "unknown server error"))
-    cls = AuthError if code in AUTH_CODES else ServerError
+    if code in AUTH_CODES:
+        cls = AuthError
+    elif code == "worker_unavailable":
+        cls = WorkerUnavailableError
+    else:
+        cls = ServerError
     return cls(message, code=code, request_id=resp.get("id"))

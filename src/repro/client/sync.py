@@ -87,6 +87,9 @@ class EvalClient:
     def ping(self) -> str:
         return self._call(self._async.ping())
 
+    def health(self) -> dict:
+        return self._call(self._async.health())
+
     def stats(self) -> dict:
         return self._call(self._async.stats())
 

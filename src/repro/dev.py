@@ -19,14 +19,20 @@ README.md:
    must coalesce, plus one >64 KiB ``register_qrel`` payload on each
    transport (the frame size that crashed the seed serve layer) —
    asserting bit-identical results throughout, and
-5. the sweep smoke test (``python -m repro.dev sweep-smoke`` /
+5. the cluster smoke test (``python -m repro.dev cluster-smoke`` /
+   ``make cluster-smoke``): boot a 2-worker ``repro.serve.cluster`` over
+   TCP, round-trip a >64 KiB payload through the consistent-hash router
+   bit-identically, then SIGKILL the owning worker while a request is in
+   its coalescing window and assert the router restarts it, replays the
+   registration journal, and retries transparently, and
+6. the sweep smoke test (``python -m repro.dev sweep-smoke`` /
    ``make sweep-smoke``): evaluate a small K-run sweep
    (:func:`repro.core.evaluate_sweep`) and assert it is bit-identical to
    the K independent ``evaluate_buffer`` calls it replaces, then run the
    all-pairs paired t-test + Holm correction (:mod:`repro.stats`) and
    check the statistics invariants (symmetric unit-diagonal p matrices,
    Holm <= Bonferroni) plus the conformance fixture's known p-value, and
-6. the sweep benchmark smoke: ``python -m benchmarks.run --only sweep``
+7. the sweep benchmark smoke: ``python -m benchmarks.run --only sweep``
    must complete and record its rows (CI asserts the >=5x
    significance-stack speedup from the recorded results).
 
@@ -157,6 +163,60 @@ _CLIENT_SMOKE = """
 """
 
 
+_CLUSTER_SMOKE = """
+    import asyncio, json
+    from repro.client import EvalClient
+    from repro.core import RelevanceEvaluator
+    from repro.serve.cluster.testing import ClusterThread
+
+    # a payload comfortably past 64 KiB, through the router's raw path
+    big_qrel = {"Q%04d-%s" % (i, "x" * 80):
+                {"D%04d-%s" % (d, "y" * 80): int((i + d) % 3)
+                 for d in range(24)} for i in range(36)}
+    big_run = {q: {d: float((i * 31 + j * 7) % 97) / 97.0
+                   for j, d in enumerate(docs)}
+               for i, (q, docs) in enumerate(big_qrel.items())}
+    payload = json.dumps({"op": "evaluate", "qrel_id": "big",
+                          "run": big_run})
+    assert len(payload) > (1 << 16), len(payload)
+    want = RelevanceEvaluator(big_qrel, ("map", "ndcg")).evaluate(big_run)
+
+    # a wide coalescing window so the kill lands mid-request
+    with ClusterThread(2, worker_args=["--backend", "single",
+                                       "--window-ms", "250"],
+                       router_kw=dict(retries=4,
+                                      health_interval=30.0)) as cluster:
+        with EvalClient(cluster.host, cluster.port, timeout=180) as client:
+            assert client.ping() == "pong"
+            health = client.health()
+            assert health["status"] == "ok" and health["ready"] == 2, health
+            client.register_qrel("big", big_qrel, ("map", "ndcg"))
+            res = client.evaluate("big", run=big_run)
+            assert res.per_query == want  # >64 KiB round trip, bit-identical
+
+            owner = cluster.owner_of("big")
+            future = client.submit("big", run=big_run)
+
+            async def wait_inflight():
+                slot = cluster.router._slots[owner]
+                while True:
+                    h = await slot.proc.client.health()
+                    if h["in_flight"]:
+                        return
+                    await asyncio.sleep(0.002)
+
+            cluster.call(wait_inflight(), timeout=60)
+            cluster.kill_worker(owner)  # SIGKILL mid-request
+            assert future.result(180).per_query == want  # transparent retry
+        counters = dict(cluster.router.counters)
+    assert counters["restarts"] >= 1 and counters["worker_retries"] >= 1, \\
+        counters
+    print("cluster smoke: OK (2 workers, >64 KiB through the router, "
+          "worker killed mid-request -> restart + journal replay + "
+          "transparent retry, bit-identical)")
+"""
+
+
 _SWEEP_SMOKE = """
     import numpy as np
     from repro import stats
@@ -229,8 +289,17 @@ def client_smoke() -> int:
         cwd=ROOT, env=_env()).returncode
 
 
+def cluster_smoke() -> int:
+    """2-worker cluster: big frames + kill-retry fault path (step 5)."""
+    print("== cluster smoke (2 workers, router, worker-kill retry) ==",
+          flush=True)
+    code = textwrap.dedent(_CLUSTER_SMOKE)
+    return subprocess.run([sys.executable, "-c", code], cwd=ROOT,
+                          env=_env()).returncode
+
+
 def sweep_smoke() -> int:
-    """K-run sweep bit-identity + statistics invariants (step 5)."""
+    """K-run sweep bit-identity + statistics invariants (step 6)."""
     print("== sweep smoke (evaluate_sweep + repro.stats) ==", flush=True)
     code = textwrap.dedent(_SWEEP_SMOKE.format(
         qrel=_fixture("conformance.qrel"), run=_fixture("conformance.run")))
@@ -259,6 +328,9 @@ def verify() -> int:
     rc = client_smoke()
     if rc != 0:
         return rc
+    rc = cluster_smoke()
+    if rc != 0:
+        return rc
     rc = sweep_smoke()
     if rc != 0:
         return rc
@@ -276,10 +348,12 @@ def main(argv=None) -> int:
         return serve_smoke()
     if argv == ["client-smoke"]:
         return client_smoke()
+    if argv == ["cluster-smoke"]:
+        return cluster_smoke()
     if argv == ["sweep-smoke"]:
         return sweep_smoke()
     print("usage: python -m repro.dev "
-          "{verify|serve-smoke|client-smoke|sweep-smoke}",
+          "{verify|serve-smoke|client-smoke|cluster-smoke|sweep-smoke}",
           file=sys.stderr)
     return 2
 

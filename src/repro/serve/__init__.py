@@ -26,7 +26,7 @@ pipelining, reconnect-with-retry).
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cache import LRUCache
 from repro.serve.frontend import (handle_line, handle_request, main,
-                                  serve_stdio, serve_tcp)
+                                  serve_protocol, serve_stdio, serve_tcp)
 from repro.serve.service import EvaluationService, ServeResult
 from repro.serve.wire import (DEFAULT_FRAME_LIMIT, ERROR_CODES,
                               OversizedFrame, ProtocolError, TokenBucket,
@@ -40,6 +40,7 @@ __all__ = [
     "handle_request",
     "handle_line",
     "serve_tcp",
+    "serve_protocol",
     "serve_stdio",
     "main",
     "DEFAULT_FRAME_LIMIT",

@@ -1,0 +1,34 @@
+"""Multi-worker serve cluster: a consistent-hash router over processes.
+
+One ``repro.serve`` process coalesces beautifully but is one asyncio loop
+behind one GIL.  This package is the scale-out story: a router front-end
+(:class:`~repro.serve.cluster.router.Router`) speaking the *same*
+JSON-lines protocol on its public port, consistent-hashing ``qrel_id``s
+(:class:`~repro.serve.cluster.ring.HashRing`) onto a supervised pool of
+``python -m repro.serve`` worker subprocesses
+(:class:`~repro.serve.cluster.worker.WorkerProcess`) and fanning requests
+out/in over :class:`repro.client.AsyncEvalClient` connections — each
+collection interned by exactly one worker, each worker's micro-batcher
+still coalescing the traffic aimed at it.
+
+Workers are restarted with backoff on crash or failed health probe, and
+the router replays its registration journal onto the fresh process, so
+idempotent requests (``evaluate``, ``compare``, ``register_*``) retry
+transparently across a worker death; non-idempotent ``drop_qrel`` answers
+a machine-readable ``worker_unavailable`` error instead.  See
+``docs/SERVING.md`` (cluster section) for topology, failure semantics,
+and the ``python -m repro.serve.cluster`` flags; tests in
+``tests/test_cluster.py`` pin bit-identity against single-process serving
+and exercise the fault paths deterministically.
+"""
+
+from repro.serve.cluster.ring import HashRing
+from repro.serve.cluster.router import Router
+from repro.serve.cluster.worker import WorkerProcess, WorkerStartupError
+
+__all__ = [
+    "HashRing",
+    "Router",
+    "WorkerProcess",
+    "WorkerStartupError",
+]

@@ -1,0 +1,133 @@
+"""``python -m repro.serve.cluster`` — boot a router + worker pool.
+
+The router listens on ``--host``/``--port`` speaking the exact same
+JSON-lines protocol as a single ``python -m repro.serve`` server (clients
+and the ``repro.client`` library work unchanged), and fans requests out to
+``--workers`` supervised ``repro.serve`` subprocesses by consistent-hashed
+``qrel_id``.
+
+Router-level knobs (``--auth-token``, ``--rate-limit``, ``--burst``,
+``--max-frame-mb``) guard the public listener; the worker knobs
+(``--backend``, ``--window-ms``, ``--max-batch``, ``--max-collections``,
+``--max-pending``) pass through to every worker's command line.
+
+SIGINT/SIGTERM drain gracefully: stop accepting, answer in-flight
+requests, then SIGTERM each worker so it runs its own drain.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import signal
+import sys
+from typing import Optional, Sequence
+
+from repro.serve.cluster.router import Router
+from repro.serve.frontend import serve_protocol
+from repro.serve.wire import DEFAULT_FRAME_LIMIT
+
+
+def build_router(args, *, frame_limit: int) -> Router:
+    """A :class:`Router` from parsed CLI args (worker flags passed through)."""
+    worker_args = [
+        "--backend", args.backend,
+        "--window-ms", str(args.window_ms),
+        "--max-batch", str(args.max_batch),
+        "--max-collections", str(args.max_collections),
+        "--max-pending", str(args.max_pending),
+    ]
+    return Router(args.workers, worker_args=worker_args,
+                  replicas=args.replicas, retries=args.retries,
+                  health_interval=args.health_interval,
+                  frame_limit=frame_limit)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.cluster",
+        description="Consistent-hash router over a pool of repro.serve "
+                    "worker processes (same JSON-lines protocol).")
+    ap.add_argument("--workers", type=int, default=2, metavar="N",
+                    help="worker processes in the pool (default 2)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="router listen address (default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="router listen port (default 0 = ephemeral)")
+    ap.add_argument("--replicas", type=int, default=64, metavar="N",
+                    help="virtual nodes per worker on the hash ring")
+    ap.add_argument("--retries", type=int, default=3, metavar="N",
+                    help="transparent retries of idempotent ops across "
+                         "worker restarts")
+    ap.add_argument("--health-interval", type=float, default=1.0,
+                    metavar="S", help="seconds between worker health "
+                    "probes (default 1)")
+    # router-level hardening (same semantics as python -m repro.serve)
+    ap.add_argument("--max-frame-mb", type=float,
+                    default=DEFAULT_FRAME_LIMIT / 2**20, metavar="MB",
+                    help="request line length limit in MiB (default 64)")
+    ap.add_argument("--auth-token", default=None, metavar="TOKEN",
+                    help="require connections to authenticate first")
+    ap.add_argument("--rate-limit", type=float, default=None, metavar="N",
+                    help="per-connection token-bucket budget in requests/s")
+    ap.add_argument("--burst", type=float, default=None, metavar="N",
+                    help="token-bucket burst capacity (default max(1, rate))")
+    # worker pass-through knobs
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "single", "sharded"),
+                    help="worker evaluation backend")
+    ap.add_argument("--window-ms", type=float, default=2.0, metavar="MS",
+                    help="worker coalescing window in milliseconds")
+    ap.add_argument("--max-batch", type=int, default=64, metavar="N",
+                    help="worker early-flush batch size")
+    ap.add_argument("--max-collections", type=int, default=8, metavar="N",
+                    help="worker LRU capacity for resident collections")
+    ap.add_argument("--max-pending", type=int, default=256, metavar="N",
+                    help="worker in-flight request cap")
+    args = ap.parse_args(argv)
+    limit = max(1, int(args.max_frame_mb * 2**20))
+
+    async def run() -> None:
+        router = build_router(args, frame_limit=limit)
+        await router.start()
+        server = await serve_protocol(
+            router.handle, args.host, args.port, limit=limit,
+            auth_token=args.auth_token, rate_limit=args.rate_limit,
+            burst=args.burst)
+        addr = server.sockets[0].getsockname()
+        print(f"serving on {addr[0]}:{addr[1]}", file=sys.stderr,
+              flush=True)
+        print(f"cluster: {args.workers} worker(s) "
+              f"{', '.join(router.worker_names)}", file=sys.stderr,
+              flush=True)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except (NotImplementedError, RuntimeError):
+                pass  # platform without signal handlers (Windows loop)
+        try:
+            await stop.wait()
+        finally:
+            # stop accepting, give already-read lines a beat to enter
+            # handle(), answer in-flight, then cascade to the workers
+            server.close()
+            await server.wait_closed()
+            await asyncio.sleep(0.05)
+            await router.drain()
+            others = [t for t in asyncio.all_tasks()
+                      if t is not asyncio.current_task()]
+            if others:
+                await asyncio.wait(others, timeout=1.0)
+            print("drained; exiting", file=sys.stderr, flush=True)
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

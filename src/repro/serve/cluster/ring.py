@@ -1,0 +1,103 @@
+"""Consistent-hash ring: which worker owns which collection id.
+
+The cluster shards *collections* (qrel ids), not requests: every request
+naming a ``qrel_id`` goes to the one worker whose LRU interned that qrel,
+so a hot collection's evaluator lives exactly once per worker process and
+the worker's micro-batcher still coalesces everything aimed at it.
+
+Plain modulo hashing would reshuffle almost every collection when the pool
+grows or shrinks; the classic consistent-hash construction keeps the
+disruption to ~1/N of the keyspace.  Each node is hashed onto the ring at
+``replicas`` pseudo-random points (virtual nodes — 64 by default, enough
+to keep the per-node share within a few percent of uniform for small
+pools) and a key belongs to the first node point at or after its own hash,
+wrapping at the top.
+
+Hashing is SHA-1 (stable across processes and Python versions — never
+``hash()``, which is salted per process), truncated to 64 bits.
+
+>>> ring = HashRing(["w0", "w1", "w2"])
+>>> ring.owner("robust04") == ring.owner("robust04")   # deterministic
+True
+>>> before = {k: ring.owner(k) for k in map(str, range(200))}
+>>> ring.add("w3")                                     # grow the pool
+>>> moved = [k for k, o in before.items() if ring.owner(k) != o]
+>>> 0 < len(moved) < 110                 # ~1/4 of keys move, not all
+True
+>>> all(ring.owner(k) == "w3" for k in moved)  # ...and only TO the newcomer
+True
+>>> ring.remove("w3")                    # shrink: movers return home
+>>> all(ring.owner(k) == before[k] for k in before)
+True
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import Iterable, List, Tuple
+
+
+def _hash(key: str) -> int:
+    """Stable 64-bit point on the ring for ``key``."""
+    return int.from_bytes(hashlib.sha1(key.encode("utf-8")).digest()[:8],
+                          "big")
+
+
+class HashRing:
+    """Consistent-hash ring over named nodes with virtual replicas."""
+
+    def __init__(self, nodes: Iterable[str] = (), *, replicas: int = 64):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.replicas = int(replicas)
+        self._nodes: set = set()
+        self._ring: List[Tuple[int, str]] = []   # sorted (point, node)
+        self._points: List[int] = []             # parallel sorted points
+        for node in nodes:
+            self.add(node)
+
+    @property
+    def nodes(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._nodes))
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def __contains__(self, node: str) -> bool:
+        return node in self._nodes
+
+    def add(self, node: str) -> None:
+        """Place ``node`` on the ring at ``replicas`` virtual points."""
+        if node in self._nodes:
+            raise ValueError(f"node {node!r} is already on the ring")
+        self._nodes.add(node)
+        self._ring.extend((_hash(f"{node}#{i}"), node)
+                          for i in range(self.replicas))
+        self._ring.sort()
+        self._points = [p for p, _ in self._ring]
+
+    def remove(self, node: str) -> None:
+        if node not in self._nodes:
+            raise KeyError(f"node {node!r} is not on the ring")
+        self._nodes.discard(node)
+        self._ring = [(p, n) for p, n in self._ring if n != node]
+        self._points = [p for p, _ in self._ring]
+
+    def owner(self, key: str) -> str:
+        """The node owning ``key``: first node point at/after its hash."""
+        if not self._ring:
+            raise KeyError("ring is empty: no workers")
+        i = bisect.bisect_left(self._points, _hash(key))
+        if i == len(self._points):
+            i = 0  # wrap past the top of the ring
+        return self._ring[i][1]
+
+    def copy(self) -> "HashRing":
+        """An independent ring with the same membership (for what-if
+        ownership computations during rebalancing)."""
+        clone = HashRing(replicas=self.replicas)
+        clone._nodes = set(self._nodes)
+        clone._ring = list(self._ring)
+        clone._points = list(self._points)
+        return clone

@@ -1,0 +1,535 @@
+"""The cluster router: consistent-hash fan-out over worker processes.
+
+Topology (one router process, N worker processes)::
+
+    clients ──TCP──▶ Router ──┬──▶ worker w0  (repro.serve, own port)
+      JSON-lines    (ring)    ├──▶ worker w1
+                              └──▶ worker w…
+
+Every request naming a ``qrel_id`` is routed to the worker that owns it on
+the :class:`~repro.serve.cluster.ring.HashRing` — so each collection is
+interned into exactly one worker's LRU and that worker's micro-batcher
+coalesces all traffic aimed at it.  ``evaluate``/``compare`` ride the raw
+fan-out path (:meth:`AsyncEvalClient.forward`): the router parses each
+request line once for routing, then relays the original bytes with a
+spliced internal id and relays the response bytes back with the client's
+id restored — no second serialization of multi-megabyte payloads.
+
+Fault model:
+
+* a worker crash fails that worker's in-flight futures immediately; the
+  supervisor task restarts the process with exponential backoff and
+  *replays the registration journal* (every ``register_qrel`` /
+  ``register_run`` the router has accepted for collections the worker
+  owns) before marking it ready again;
+* **idempotent** ops (``evaluate``, ``compare``, ``register_*``, reads)
+  retry transparently against the restarted worker — callers just see a
+  slower response;
+* **non-idempotent** ``drop_qrel`` is never retried: if the owning worker
+  is down (or dies mid-request) the caller gets a machine-readable
+  ``worker_unavailable`` error and decides for itself;
+* a periodic ``health`` probe per worker catches hung-but-alive processes
+  and kills them onto the same restart path.
+
+Membership changes (:meth:`Router.add_worker` / :meth:`Router.remove_worker`)
+rebalance the ring with journal replay: moved collections are registered
+on their new owner *before* the ring swaps (requests never see a gap) and
+best-effort dropped from the old owner after.
+
+:meth:`Router.drain` cascades: wait for router-level in-flight requests,
+then stop every worker via SIGTERM → the worker's own
+``EvaluationService.drain`` machinery.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional, Sequence
+
+from repro.client.errors import ServerError
+from repro.serve.cluster.ring import HashRing
+from repro.serve.cluster.worker import WorkerProcess
+from repro.serve.frontend import _check_request, _error
+from repro.serve.wire import DEFAULT_FRAME_LIMIT, ProtocolError
+
+#: responses from our own front-ends lead with their id (dict insertion
+#: order survives json.dumps), so the id can be rewritten by prefix splice
+_RESPONSE_ID = re.compile(rb'^\{"id":\s*(?:-?\d+|null)\s*,')
+
+#: ops fanned out as raw bytes (hot path) and retried across restarts
+_RAW_OPS = frozenset({"evaluate", "compare"})
+
+#: ops handled with a parsed round trip, journaled, and retried
+_CONTROL_OPS = frozenset({"register_qrel", "register_run"})
+
+
+def _rewrite_id(resp: bytes, rid) -> bytes:
+    """Restore the client's request id on a forwarded response frame."""
+    rid_b = json.dumps(rid).encode()
+    m = _RESPONSE_ID.match(resp)
+    if m is not None:
+        return b'{"id": ' + rid_b + b"," + resp[m.end():]
+    try:  # rare: a response shape we don't recognise — parse and patch
+        msg = json.loads(resp)
+        msg["id"] = rid
+        return json.dumps(msg).encode()
+    except ValueError:  # pragma: no cover - garbage from a worker
+        return resp
+
+
+class _Slot:
+    """One worker position on the ring (stable name, restartable process)."""
+
+    __slots__ = ("name", "proc", "ready", "restarts", "supervisor",
+                 "health_task")
+
+    def __init__(self, name: str, proc: WorkerProcess):
+        self.name = name
+        self.proc = proc
+        self.ready = asyncio.Event()
+        self.restarts = 0
+        self.supervisor: Optional[asyncio.Task] = None
+        self.health_task: Optional[asyncio.Task] = None
+
+
+class Router:
+    """Consistent-hash router over a supervised pool of serve workers.
+
+    ``worker_args`` is appended to every worker's command line (measure
+    flags, ``--window-ms``, ``--backend``, ...).  ``retries`` bounds
+    transparent re-sends of idempotent requests across worker restarts;
+    ``ready_timeout`` bounds how long a request waits for the owning
+    worker to come (back) up before giving up with ``worker_unavailable``.
+    """
+
+    def __init__(self, n_workers: int = 2, *,
+                 worker_args: Sequence[str] = (), replicas: int = 64,
+                 retries: int = 3, ready_timeout: float = 15.0,
+                 start_timeout: float = 60.0, health_interval: float = 1.0,
+                 health_timeout: float = 5.0, backoff: float = 0.25,
+                 max_backoff: float = 4.0,
+                 frame_limit: int = DEFAULT_FRAME_LIMIT):
+        if n_workers < 1:
+            raise ValueError(f"need at least one worker, got {n_workers}")
+        self._n_initial = int(n_workers)
+        self._worker_args = [str(a) for a in worker_args]
+        self._retries = int(retries)
+        self._ready_timeout = float(ready_timeout)
+        self._start_timeout = float(start_timeout)
+        self._health_interval = float(health_interval)
+        self._health_timeout = float(health_timeout)
+        self._backoff = float(backoff)
+        self._max_backoff = float(max_backoff)
+        self._frame_limit = int(frame_limit)
+        self._ring = HashRing(replicas=replicas)
+        self._slots: Dict[str, _Slot] = {}
+        self._next_slot = 0
+        #: qrel_id -> {"qrel": register_qrel payload,
+        #:             "runs": {run_id: register_run payload}} — replayed
+        #: onto restarted workers and onto new owners at rebalance.  This
+        #: is the price of restart transparency: the router holds every
+        #: accepted registration in memory.
+        self._journal: Dict[str, dict] = {}
+        self._inflight = 0
+        self._closing = False
+        self.counters = {
+            "requests": 0, "forwarded": 0, "worker_retries": 0,
+            "worker_unavailable": 0, "restarts": 0, "health_failures": 0,
+            "replayed_collections": 0, "rebalanced_collections": 0,
+        }
+
+    # -- pool lifecycle ------------------------------------------------------
+
+    def _new_slot(self, name: Optional[str] = None) -> _Slot:
+        if name is None:
+            name = f"w{self._next_slot}"
+        self._next_slot += 1
+        if name in self._slots:
+            raise ValueError(f"worker {name!r} already exists")
+        slot = _Slot(name, WorkerProcess(
+            name, extra_args=self._worker_args,
+            frame_limit=self._frame_limit))
+        self._slots[name] = slot
+        loop = asyncio.get_running_loop()
+        slot.supervisor = loop.create_task(self._supervise(slot))
+        slot.health_task = loop.create_task(self._health_loop(slot))
+        return slot
+
+    async def start(self) -> None:
+        """Spawn the initial pool and wait until every worker is ready."""
+        slots = [self._new_slot() for _ in range(self._n_initial)]
+        for slot in slots:
+            self._ring.add(slot.name)
+        try:
+            await asyncio.wait_for(
+                asyncio.gather(*(s.ready.wait() for s in slots)),
+                self._start_timeout)
+        except asyncio.TimeoutError:
+            stderr = {s.name: list(s.proc.last_stderr)[-3:]
+                      for s in slots if not s.ready.is_set()}
+            await self.drain()
+            raise RuntimeError(
+                f"cluster failed to start within {self._start_timeout}s; "
+                f"unready workers: {stderr}") from None
+
+    async def _supervise(self, slot: _Slot) -> None:
+        """Keep one slot populated: start → ready → wait for death → redo."""
+        backoff = self._backoff
+        while not self._closing:
+            try:
+                await slot.proc.start(ready_timeout=self._ready_timeout)
+                await self._replay(slot)
+            except asyncio.CancelledError:
+                raise
+            except Exception as exc:  # startup/replay failed: back off
+                if self._closing:
+                    return
+                print(f"[cluster] worker {slot.name} start failed: {exc}; "
+                      f"retrying in {backoff:.2f}s", file=sys.stderr,
+                      flush=True)
+                await asyncio.sleep(backoff)
+                backoff = min(backoff * 2, self._max_backoff)
+                continue
+            backoff = self._backoff
+            slot.ready.set()
+            await slot.proc.wait()  # blocks for this generation's lifetime
+            slot.ready.clear()
+            if slot.proc.client is not None:
+                # fail the dead generation's pending futures NOW so raw
+                # forwards waiting on them retry instead of hanging
+                with contextlib.suppress(Exception):
+                    await slot.proc.client.aclose()
+            if self._closing:
+                return
+            slot.restarts += 1
+            self.counters["restarts"] += 1
+            print(f"[cluster] worker {slot.name} exited "
+                  f"(rc={slot.proc.proc.returncode}); restarting in "
+                  f"{backoff:.2f}s", file=sys.stderr, flush=True)
+            await asyncio.sleep(backoff)
+
+    async def _health_loop(self, slot: _Slot) -> None:
+        """Probe a ready worker with the cheap ``health`` op on a timer.
+
+        ``proc.wait`` in the supervisor catches crashes instantly; this
+        loop catches the *hung-but-alive* worker, which gets SIGKILLed
+        onto the same restart-and-replay path.
+        """
+        while not self._closing:
+            await asyncio.sleep(self._health_interval)
+            if self._closing or not slot.ready.is_set():
+                continue
+            client = slot.proc.client
+            try:
+                await asyncio.wait_for(client.health(),
+                                       self._health_timeout)
+            except asyncio.CancelledError:
+                raise
+            except Exception:
+                if self._closing or not slot.ready.is_set():
+                    continue
+                self.counters["health_failures"] += 1
+                print(f"[cluster] worker {slot.name} failed its health "
+                      "check; killing for restart", file=sys.stderr,
+                      flush=True)
+                slot.ready.clear()
+                slot.proc.kill()
+
+    async def _replay(self, slot: _Slot, ring: Optional[HashRing] = None,
+                      only: Optional[Sequence[str]] = None) -> int:
+        """Re-register journaled collections owned by ``slot``.
+
+        ``ring`` defaults to the live ring; rebalancing passes the *next*
+        ring so moved collections land on their future owner before the
+        swap.  ``only`` restricts to the listed qrel ids.
+        """
+        ring = ring if ring is not None else self._ring
+        client = slot.proc.client
+        n = 0
+        for qrel_id in (list(self._journal) if only is None else only):
+            entry = self._journal.get(qrel_id)
+            if entry is None or ring.owner(qrel_id) != slot.name:
+                continue
+            await client._request("register_qrel", **entry["qrel"])
+            for run_payload in entry["runs"].values():
+                await client._request("register_run", **run_payload)
+            n += 1
+        if n:
+            self.counters["replayed_collections"] += n
+        return n
+
+    # -- membership changes --------------------------------------------------
+
+    async def add_worker(self, name: Optional[str] = None) -> str:
+        """Grow the pool by one worker; rebalance moved collections.
+
+        The new worker is started and loaded with every collection the
+        grown ring assigns to it *before* the ring is swapped, so routing
+        never sees an owner without its data; the old owners drop their
+        copies afterwards (best effort — a failed drop only wastes cache).
+        """
+        slot = self._new_slot(name)
+        try:
+            await asyncio.wait_for(slot.ready.wait(), self._start_timeout)
+        except asyncio.TimeoutError:
+            await self._retire_slot(slot)
+            raise RuntimeError(
+                f"new worker {slot.name} failed to become ready; "
+                f"stderr: {list(slot.proc.last_stderr)[-3:]}") from None
+        new_ring = self._ring.copy()
+        new_ring.add(slot.name)
+        moved = [q for q in self._journal
+                 if new_ring.owner(q) != self._ring.owner(q)]
+        await self._replay(slot, ring=new_ring, only=moved)
+        old_owner = {q: self._ring.owner(q) for q in moved}
+        self._ring = new_ring
+        self.counters["rebalanced_collections"] += len(moved)
+        for q in moved:
+            old = self._slots.get(old_owner[q])
+            if old is not None and old.ready.is_set():
+                with contextlib.suppress(Exception):
+                    await old.proc.client._request("drop_qrel", qrel_id=q)
+        return slot.name
+
+    async def remove_worker(self, name: str) -> None:
+        """Shrink the pool; its collections move to their new owners."""
+        if name not in self._slots:
+            raise KeyError(f"no worker named {name!r}")
+        if len(self._slots) == 1:
+            raise ValueError("cannot remove the last worker")
+        slot = self._slots[name]
+        new_ring = self._ring.copy()
+        new_ring.remove(name)
+        moved = [q for q in self._journal if self._ring.owner(q) == name]
+        for q in moved:
+            heir = self._slots[new_ring.owner(q)]
+            if not await self._wait_ready(heir):
+                raise RuntimeError(
+                    f"cannot rebalance {q!r}: worker {heir.name} is down")
+            await self._replay(heir, ring=new_ring, only=[q])
+        self._ring = new_ring
+        self.counters["rebalanced_collections"] += len(moved)
+        del self._slots[name]
+        await self._retire_slot(slot)
+
+    async def _retire_slot(self, slot: _Slot) -> None:
+        for task in (slot.health_task, slot.supervisor):
+            if task is not None:
+                task.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await task
+        await slot.proc.stop()
+
+    # -- request handling ----------------------------------------------------
+
+    async def handle(self, req: dict, raw: bytes):
+        """The :func:`repro.serve.frontend.serve_protocol` handler.
+
+        Returns a response dict, or raw response bytes for the fan-out
+        path.  Never raises.
+        """
+        self.counters["requests"] += 1
+        self._inflight += 1
+        try:
+            return await self._handle(req, raw)
+        except Exception as exc:  # noqa: BLE001 — router bug: tell the client
+            return _error(req.get("id"),
+                          f"router error: {type(exc).__name__}: {exc}",
+                          "internal")
+        finally:
+            self._inflight -= 1
+
+    async def _handle(self, req: dict, raw: bytes):
+        rid = req.get("id")
+        try:
+            op = _check_request(req)
+        except ProtocolError as exc:
+            return _error(rid, str(exc), exc.code)
+        if op == "ping":
+            return {"id": rid, "ok": True, "result": "pong"}
+        if op == "health":
+            return {"id": rid, "ok": True, "result": self.health()}
+        if op == "auth":
+            # serve_protocol intercepts auth when the router has a token;
+            # with no token configured, accept any (same as the worker
+            # front-end) so token-configured clients work unchanged
+            return {"id": rid, "ok": True,
+                    "result": {"authenticated": True}}
+        if op == "stats":
+            return {"id": rid, "ok": True, "result": await self.stats()}
+        qrel_id = str(req["qrel_id"])
+        if op == "drop_qrel":
+            return await self._drop(qrel_id, req)
+        if op in _CONTROL_OPS:
+            return await self._control(op, qrel_id, req)
+        assert op in _RAW_OPS, op
+        return await self._forward(qrel_id, raw, rid)
+
+    async def _wait_ready(self, slot: _Slot) -> bool:
+        if slot.ready.is_set():
+            return True
+        try:
+            await asyncio.wait_for(slot.ready.wait(), self._ready_timeout)
+            return True
+        except asyncio.TimeoutError:
+            return False
+
+    def _owner_slot(self, qrel_id: str) -> _Slot:
+        # resolved fresh on every retry so rebalances take effect mid-flight
+        return self._slots[self._ring.owner(qrel_id)]
+
+    def _unavailable(self, rid, qrel_id: str, op: str, attempts: int):
+        self.counters["worker_unavailable"] += 1
+        name = self._ring.owner(qrel_id)
+        return _error(
+            rid, f"worker {name!r} (owner of qrel_id {qrel_id!r}) is "
+            f"unavailable; op {op!r} not completed after {attempts} "
+            f"attempt(s)", "worker_unavailable")
+
+    async def _forward(self, qrel_id: str, raw: bytes, rid):
+        """Raw fan-out with transparent retry for idempotent ops."""
+        attempts = self._retries + 1
+        for attempt in range(attempts):
+            slot = self._owner_slot(qrel_id)
+            if not await self._wait_ready(slot):
+                break
+            try:
+                resp = await slot.proc.client.forward(raw)
+            except (ConnectionError, OSError):
+                self.counters["worker_retries"] += 1
+                # the supervisor needs a beat to observe the death and
+                # clear `ready`; otherwise retries burn on a stale client
+                await asyncio.sleep(min(0.05 * 2 ** attempt, 1.0))
+                continue
+            self.counters["forwarded"] += 1
+            return _rewrite_id(resp, rid)
+        return self._unavailable(rid, qrel_id, "evaluate/compare", attempts)
+
+    async def _control(self, op: str, qrel_id: str, req: dict):
+        """Parsed round trip for ``register_*``: journaled on success."""
+        rid = req.get("id")
+        payload = {k: v for k, v in req.items() if k not in ("op", "id")}
+        attempts = self._retries + 1
+        for attempt in range(attempts):
+            slot = self._owner_slot(qrel_id)
+            if not await self._wait_ready(slot):
+                break
+            try:
+                result = await slot.proc.client._request(op, **payload)
+            except (ConnectionError, OSError):
+                self.counters["worker_retries"] += 1
+                await asyncio.sleep(min(0.05 * 2 ** attempt, 1.0))
+                continue
+            except ServerError as exc:
+                return _error(rid, exc.args[0], exc.code)
+            if op == "register_qrel":
+                self._journal[qrel_id] = {"qrel": payload, "runs": {}}
+            else:
+                entry = self._journal.get(qrel_id)
+                if entry is not None:
+                    entry["runs"][str(req["run_id"])] = payload
+            return {"id": rid, "ok": True, "result": result}
+        return self._unavailable(rid, qrel_id, op, attempts)
+
+    async def _drop(self, qrel_id: str, req: dict):
+        """``drop_qrel``: single attempt, never retried (non-idempotent)."""
+        rid = req.get("id")
+        slot = self._owner_slot(qrel_id)
+        if not slot.ready.is_set():
+            self.counters["worker_unavailable"] += 1
+            return _error(
+                rid, f"worker {slot.name!r} (owner of qrel_id "
+                f"{qrel_id!r}) is down; 'drop_qrel' is not retried — "
+                "re-send once the worker is back if the drop still "
+                "matters", "worker_unavailable")
+        try:
+            result = await slot.proc.client._request("drop_qrel",
+                                                     qrel_id=req["qrel_id"])
+        except ServerError as exc:
+            return _error(rid, exc.args[0], exc.code)
+        except (ConnectionError, OSError) as exc:
+            self.counters["worker_unavailable"] += 1
+            return _error(
+                rid, f"worker {slot.name!r} died during 'drop_qrel' "
+                f"({exc}); the drop may or may not have happened",
+                "worker_unavailable")
+        self._journal.pop(qrel_id, None)
+        return {"id": rid, "ok": True, "result": result}
+
+    # -- introspection -------------------------------------------------------
+
+    def health(self) -> dict:
+        """Local (no worker round trip) cluster liveness snapshot."""
+        workers = [{
+            "name": s.name, "ready": s.ready.is_set(),
+            "generation": s.proc.generation, "restarts": s.restarts,
+            "pid": s.proc.proc.pid if s.proc.proc is not None else None,
+        } for s in self._slots.values()]
+        ready = sum(1 for w in workers if w["ready"])
+        return {"status": "ok" if ready == len(workers) else "degraded",
+                "workers": workers, "ready": ready,
+                "collections": len(self._journal)}
+
+    async def stats(self) -> dict:
+        """Aggregated worker stats + router counters.
+
+        Top-level ``requests``/``backend_calls`` sum over live workers so
+        existing coalescing assertions read the same keys as against a
+        single server.
+        """
+        workers: Dict[str, Optional[dict]] = {}
+        for name, slot in self._slots.items():
+            if slot.ready.is_set():
+                try:
+                    workers[name] = await slot.proc.client.stats()
+                    continue
+                except Exception:
+                    pass
+            workers[name] = None
+        live = [w for w in workers.values() if w is not None]
+        return {
+            "requests": sum(w.get("requests", 0) for w in live),
+            "backend_calls": sum(w.get("backend_calls", 0) for w in live),
+            "collections": sorted(
+                c for w in live for c in w.get("collections", ())),
+            "router": {**self.counters, "workers": len(self._slots),
+                       "ready": sum(1 for w in workers.values()
+                                    if w is not None),
+                       "journal_collections": len(self._journal)},
+            "workers": workers,
+        }
+
+    @property
+    def worker_names(self) -> Sequence[str]:
+        return tuple(self._slots)
+
+    def owner_of(self, qrel_id: str) -> str:
+        """Which worker owns ``qrel_id`` right now (fault-injection aid)."""
+        return self._ring.owner(str(qrel_id))
+
+    # -- drain ---------------------------------------------------------------
+
+    async def quiesce(self, timeout: float = 30.0) -> bool:
+        """Wait for router-level in-flight requests to finish."""
+        deadline = time.monotonic() + timeout
+        while self._inflight and time.monotonic() < deadline:
+            await asyncio.sleep(0.002)
+        return self._inflight == 0
+
+    async def drain(self, *, timeout: float = 30.0) -> None:
+        """Answer what's in flight, then cascade shutdown to the workers.
+
+        The caller must already have closed the listener (new connections
+        refused); this waits for in-flight requests, then stops
+        supervision and SIGTERMs every worker so each runs its own drain.
+        """
+        self._closing = True
+        await self.quiesce(timeout)
+        for slot in list(self._slots.values()):
+            await self._retire_slot(slot)
+        self._slots.clear()

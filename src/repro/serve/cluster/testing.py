@@ -1,0 +1,125 @@
+"""A live cluster (router + worker subprocesses) on a background thread.
+
+The cluster analogue of :class:`repro.serve.testing.ServerThread`, for
+synchronous drivers (tests, benchmarks, the ``cluster-smoke`` verify
+step): boots a :class:`~repro.serve.cluster.router.Router` and its worker
+pool on a private event-loop thread, exposes the router's TCP endpoint,
+and tears the whole tree down gracefully on :meth:`close` (listener →
+router drain → SIGTERM to every worker).
+
+    >>> from repro.serve.cluster.testing import ClusterThread
+    >>> with ClusterThread(n_workers=2) as cluster:   # doctest: +SKIP
+    ...     cluster.owner_of("robust04") in cluster.worker_names
+    True
+
+(Skipped in doctest runs: booting workers costs ~1 s each; the real
+coverage lives in ``tests/test_cluster.py``.)
+"""
+
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import Optional, Sequence, Tuple
+
+from repro.serve.cluster.router import Router
+from repro.serve.frontend import serve_protocol
+
+
+class ClusterThread:
+    """Run a router + worker pool on a private loop thread.
+
+    ``router_kw`` goes to the :class:`Router` constructor (``retries``,
+    ``health_interval``, ``worker_args``, ...); remaining keywords in
+    ``tcp_kw`` go to :func:`serve_protocol` (``limit``, ``auth_token``,
+    ``rate_limit``, ``burst``).  The router listens on ``127.0.0.1`` at an
+    ephemeral :attr:`port`.
+    """
+
+    def __init__(self, n_workers: int = 2, *,
+                 worker_args: Sequence[str] = (),
+                 router_kw: Optional[dict] = None, boot_timeout: float = 120,
+                 **tcp_kw):
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="repro-cluster-thread")
+        self._thread.start()
+
+        async def boot():
+            router = Router(n_workers, worker_args=worker_args,
+                            **(router_kw or {}))
+            await router.start()
+            server = await serve_protocol(router.handle, "127.0.0.1", 0,
+                                          **tcp_kw)
+            return router, server
+
+        self.router, self._server = self.call(boot(), timeout=boot_timeout)
+        self.host = "127.0.0.1"
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    def _run(self) -> None:
+        asyncio.set_event_loop(self._loop)
+        self._loop.run_forever()
+
+    # -- sync facade ---------------------------------------------------------
+
+    def call(self, coro, timeout: float = 60):
+        """Run a coroutine on the cluster loop; block for its result."""
+        return asyncio.run_coroutine_threadsafe(coro, self._loop).result(
+            timeout)
+
+    def stats(self) -> dict:
+        return self.call(self.router.stats())
+
+    def health(self) -> dict:
+        async def _do():
+            return self.router.health()
+        return self.call(_do())
+
+    @property
+    def worker_names(self) -> Tuple[str, ...]:
+        return tuple(self.router.worker_names)
+
+    def owner_of(self, qrel_id: str) -> str:
+        """Which worker owns ``qrel_id`` (for aiming fault injection)."""
+        return self.router.owner_of(qrel_id)
+
+    def kill_worker(self, name: str) -> int:
+        """SIGKILL a worker process (fault injection); returns its pid."""
+        async def _do():
+            proc = self.router._slots[name].proc
+            pid = proc.proc.pid
+            proc.kill()
+            return pid
+        return self.call(_do())
+
+    def add_worker(self, name: Optional[str] = None) -> str:
+        return self.call(self.router.add_worker(name), timeout=120)
+
+    def remove_worker(self, name: str) -> None:
+        self.call(self.router.remove_worker(name), timeout=120)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop accepting, drain the router, SIGTERM workers, stop loop."""
+        if self._thread.is_alive():
+            async def _shutdown():
+                self._server.close()
+                await self._server.wait_closed()
+                await self.router.drain()
+                others = [t for t in asyncio.all_tasks()
+                          if t is not asyncio.current_task()]
+                if others:
+                    await asyncio.wait(others, timeout=1)
+            self.call(_shutdown(), timeout=120)
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(10)
+        if not self._loop.is_running():
+            self._loop.close()
+
+    def __enter__(self) -> "ClusterThread":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -18,7 +18,8 @@ requests are handled concurrently so the service can coalesce them)::
 Operations: ``register_qrel``, ``register_run``, ``evaluate``,
 ``compare`` (paired significance tests across K runs — see
 :meth:`EvaluationService.compare`), ``drop_qrel``, ``stats``, ``ping``,
-``auth``.  Field names mirror the keyword arguments of
+``health`` (the cheap liveness probe used by the cluster router's health
+checks), ``auth``.  Field names mirror the keyword arguments of
 :class:`repro.serve.service.EvaluationService`.
 
 Every failure is a *response*, never a dead socket: unparseable lines,
@@ -73,6 +74,7 @@ REQUIRED_FIELDS = {
     "drop_qrel": ("qrel_id",),
     "stats": (),
     "ping": (),
+    "health": (),
     "auth": ("token",),
 }
 
@@ -152,6 +154,12 @@ async def handle_request(service: EvaluationService, req: dict) -> dict:
             result = {"dropped": service.drop_qrel(req["qrel_id"])}
         elif op == "stats":
             result = service.stats()
+        elif op == "health":
+            # the cheap liveness/readiness probe (cluster health checks hit
+            # this on a timer): counters only, no evaluation machinery
+            st = service.stats()
+            result = {"status": "ok", "in_flight": st["in_flight"],
+                      "collections": st["collections"]}
         elif op == "auth":
             # an unauthenticated front-end accepts any token (no-op), so
             # clients configured with a token work against open servers;
@@ -199,24 +207,26 @@ def _oversized_error(frame: OversizedFrame) -> dict:
 # -- TCP ---------------------------------------------------------------------
 
 
-async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
-                    port: int = 0, *, limit: int = DEFAULT_FRAME_LIMIT,
-                    auth_token: Optional[str] = None,
-                    rate_limit: Optional[float] = None,
-                    burst: Optional[float] = None):
-    """Start the TCP front-end; returns the ``asyncio`` server object.
+async def serve_protocol(handler, host: str = "127.0.0.1", port: int = 0,
+                         *, limit: int = DEFAULT_FRAME_LIMIT,
+                         auth_token: Optional[str] = None,
+                         rate_limit: Optional[float] = None,
+                         burst: Optional[float] = None):
+    """TCP JSON-lines listener around an arbitrary async request handler.
 
-    Each connection is a JSON-lines stream.  Every request line becomes its
-    own task, so slow evaluations never block the connection's reader — and
-    concurrent requests (same or different connections) coalesce in the
-    service's micro-batcher.  Pass ``port=0`` for an ephemeral port
-    (``server.sockets[0].getsockname()[1]``).
-
-    ``limit`` bounds the request line length (default 64 MiB; oversized
-    lines get a ``frame_too_large`` error response, not a dead socket).
-    ``auth_token`` requires each connection to send ``{"op": "auth",
-    "token": ...}`` before anything else; ``rate_limit``/``burst`` give
-    each connection a token bucket whose exhaustion *delays* reads.
+    The connection machinery — chunked framing with ``frame_too_large``
+    *responses* for oversized lines, per-connection auth interception,
+    token-bucket read throttling, one task per request line so slow
+    requests never block the reader, write-lock-serialized responses,
+    graceful teardown — is identical for the evaluation front-end
+    (:func:`serve_tcp`) and the cluster router
+    (:mod:`repro.serve.cluster`); only what *handles* a decoded request
+    differs.  ``handler(req, raw)`` receives the parsed request object and
+    the raw frame bytes, and returns either a response ``dict`` (JSON
+    encoded here) or pre-encoded response ``bytes`` — one JSON object, no
+    newline — written verbatim (the router's fan-out path returns worker
+    response frames untouched to skip a decode/encode round trip).
+    ``handler`` must never raise.
     """
 
     async def client(reader: asyncio.StreamReader,
@@ -227,10 +237,12 @@ async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
         bucket = (TokenBucket(rate_limit, burst)
                   if rate_limit is not None else None)
 
-        async def send(payload: dict) -> None:
+        async def send(payload) -> None:
+            body = (payload if isinstance(payload, bytes)
+                    else json.dumps(payload).encode())
             try:
                 async with wlock:
-                    writer.write(json.dumps(payload).encode() + b"\n")
+                    writer.write(body + b"\n")
                     await writer.drain()
             except (ConnectionError, OSError):
                 # client went away before reading its response — the
@@ -265,7 +277,7 @@ async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
                     "authentication required: send "
                     '{"op": "auth", "token": ...} first', "auth_required"))
                 return
-            await send(await handle_request(service, req))
+            await send(await handler(req, raw))
 
         try:
             async for raw in iter_frames(reader, limit):
@@ -299,6 +311,34 @@ async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
                 pass
 
     return await asyncio.start_server(client, host, port, limit=limit)
+
+
+async def serve_tcp(service: EvaluationService, host: str = "127.0.0.1",
+                    port: int = 0, *, limit: int = DEFAULT_FRAME_LIMIT,
+                    auth_token: Optional[str] = None,
+                    rate_limit: Optional[float] = None,
+                    burst: Optional[float] = None):
+    """Start the TCP front-end; returns the ``asyncio`` server object.
+
+    Each connection is a JSON-lines stream.  Every request line becomes its
+    own task, so slow evaluations never block the connection's reader — and
+    concurrent requests (same or different connections) coalesce in the
+    service's micro-batcher.  Pass ``port=0`` for an ephemeral port
+    (``server.sockets[0].getsockname()[1]``).
+
+    ``limit`` bounds the request line length (default 64 MiB; oversized
+    lines get a ``frame_too_large`` error response, not a dead socket).
+    ``auth_token`` requires each connection to send ``{"op": "auth",
+    "token": ...}`` before anything else; ``rate_limit``/``burst`` give
+    each connection a token bucket whose exhaustion *delays* reads.
+    """
+
+    async def handler(req: dict, raw: bytes) -> dict:
+        return await handle_request(service, req)
+
+    return await serve_protocol(handler, host, port, limit=limit,
+                                auth_token=auth_token,
+                                rate_limit=rate_limit, burst=burst)
 
 
 # -- stdio -------------------------------------------------------------------

@@ -55,6 +55,7 @@ ERROR_CODES = (
     "auth_required",    # server has a token, connection not authenticated
     "bad_auth",         # auth attempted with the wrong token
     "frame_too_large",  # request line exceeded the frame limit
+    "worker_unavailable",  # cluster router: owning worker down, not retried
     "internal",         # anything else — a server-side bug, not the client
 )
 

@@ -440,8 +440,20 @@ def test_batcher_timer_cancellation_rejects_pending_waiters():
 
         mb = MicroBatcher(flush, window=30.0)   # far beyond the test
         waiter = asyncio.ensure_future(mb.submit("k", 1))
-        await asyncio.sleep(0.01)               # timer task enters its sleep
-        (timer,) = mb._timers.values()
+
+        async def timer_sleeping():
+            # deterministic, load-immune sync: wait for the timer task to
+            # exist and then to be SUSPENDED at an await (its window
+            # sleep), so cancel() lands inside _timed_flush — not before
+            # the coroutine's first step, where cleanup could never run
+            while not mb._timers:
+                await asyncio.sleep(0)
+            (t,) = mb._timers.values()
+            while t.get_coro().cr_await is None:
+                await asyncio.sleep(0)
+            return t
+
+        timer = await asyncio.wait_for(timer_sleeping(), timeout=2.0)
         timer.cancel()
         with pytest.raises(asyncio.CancelledError):
             await asyncio.wait_for(waiter, timeout=2.0)
@@ -463,7 +475,15 @@ def test_batcher_size_cap_flush_survives_timer_cancel_race():
             asyncio.gather(mb.submit("k", 1), mb.submit("k", 2)),
             timeout=2.0)
         assert results == [10, 20]
-        await asyncio.sleep(0.01)   # let the cancelled timer task finish
+
+        async def spin_idle():
+            # the cancelled timer and the flush task's finally block are
+            # plain ready-queue callbacks: yielding (no wall-clock sleep)
+            # until idle() is deterministic under any load
+            while not mb.idle():
+                await asyncio.sleep(0)
+
+        await asyncio.wait_for(spin_idle(), timeout=2.0)
         assert mb.idle()
 
     asyncio.run(main())

@@ -66,6 +66,166 @@ def test_iter_frames_exact_limit_is_not_oversized():
     assert out == [b"z" * 100]
 
 
+# -- framing fuzz: random splits, limit straddles, garbage interleave ---------
+#
+# The invariant under fuzz: however the byte stream is cut into read
+# chunks, iter_frames yields exactly one item per input line, in order —
+# the payload bytes for lines within the limit, ONE OversizedFrame marker
+# for lines beyond it — and realigns on the next newline every time.
+# Property-based via hypothesis when installed; a seeded random sweep
+# covers the same ground always.
+
+
+def _fuzz_lines(rng, limit):
+    """Random line payloads: blanks, garbage, limit straddles, big blobs."""
+    lines = []
+    for _ in range(rng.randint(1, 12)):
+        roll = rng.random()
+        if roll < 0.15:
+            lines.append(b"")  # blank line: still one (empty) frame
+        elif roll < 0.35:  # garbage that is not JSON — framing doesn't care
+            lines.append(bytes(rng.choice(b'{<garbage>:,"\\')
+                               for _ in range(rng.randint(1, 30))))
+        elif roll < 0.55:  # straddle the limit exactly: -1, exact, +1
+            lines.append(b"s" * (limit + rng.choice((-1, 0, 1))))
+        else:
+            lines.append(b"x" * rng.randint(1, 2 * limit))
+    return lines
+
+
+def _random_chunks(rng, stream, max_cuts=8):
+    """Cut a byte stream at random positions (coalescing + splitting)."""
+    cuts = sorted(rng.randrange(len(stream) + 1)
+                  for _ in range(rng.randint(0, max_cuts)))
+    bounds = [0] + cuts + [len(stream)]
+    return [stream[a:b] for a, b in zip(bounds, bounds[1:]) if b > a]
+
+
+def _assert_aligned(lines, chunks, limit):
+    got = _frames(chunks, limit)
+    assert len(got) == len(lines), (len(got), len(lines))
+    for item, line in zip(got, lines):
+        if len(line) > limit:
+            assert isinstance(item, OversizedFrame)
+            assert item.limit == limit and item.size > limit
+        else:
+            assert item == line
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_iter_frames_fuzz_seeded(seed):
+    import random
+
+    rng = random.Random(seed)
+    limit = rng.choice((16, 64, 100, 257))
+    lines = _fuzz_lines(rng, limit)
+    stream = b"".join(line + b"\n" for line in lines)
+    _assert_aligned(lines, _random_chunks(rng, stream), limit)
+
+
+def test_iter_frames_fuzz_one_byte_chunks():
+    """The pathological dribble: every chunk is a single byte."""
+    import random
+
+    rng = random.Random(99)
+    limit = 32
+    lines = _fuzz_lines(rng, limit)
+    stream = b"".join(line + b"\n" for line in lines)
+    _assert_aligned(lines, [stream[i:i + 1] for i in range(len(stream))],
+                    limit)
+
+
+def test_iter_frames_limit_straddle_at_chunk_boundary():
+    """Frames of limit-1/limit/limit+1 bytes, each split AT the limit."""
+    limit = 50
+    for size in (limit - 1, limit, limit + 1):
+        line = b"b" * size
+        for cut in (limit - 1, limit, min(size, limit)):
+            stream = line + b"\nafter\n"
+            chunks = [stream[:cut], stream[cut:]]
+            _assert_aligned([line, b"after"], chunks, limit)
+
+
+def test_iter_frames_fuzz_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(data=st.data(), limit=st.integers(8, 300))
+    def inner(data, limit):
+        lines = data.draw(st.lists(
+            st.one_of(
+                st.binary(max_size=3 * limit).filter(
+                    lambda b: b"\n" not in b),
+                st.integers(-1, 1).map(
+                    lambda d: b"s" * max(0, limit + d))),
+            min_size=1, max_size=10))
+        stream = b"".join(line + b"\n" for line in lines)
+        n_cuts = data.draw(st.integers(0, 8))
+        cuts = sorted(data.draw(st.integers(0, len(stream)))
+                      for _ in range(n_cuts))
+        bounds = [0] + cuts + [len(stream)]
+        chunks = [stream[a:b] for a, b in zip(bounds, bounds[1:]) if b > a]
+        _assert_aligned(lines, chunks, limit)
+
+    inner()
+
+
+def test_tcp_every_line_gets_exactly_one_response():
+    """Interleave pings, garbage, and oversized lines on one connection:
+    N lines in → N responses out, ids aligned, connection never dies."""
+    from repro.serve import EvaluationService, serve_tcp
+
+    async def main():
+        svc = EvaluationService(backend="single")
+        server = await serve_tcp(svc, "127.0.0.1", 0, limit=256)
+        port = server.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        import random
+
+        rng = random.Random(5)
+        sent = []  # expected (kind, id) per line, in order
+        payload = b""
+        for i in range(40):
+            roll = rng.random()
+            if roll < 0.4:
+                payload += json.dumps({"op": "ping", "id": i}).encode() \
+                    + b"\n"
+                sent.append(("pong", i))
+            elif roll < 0.7:
+                payload += b"}{ not json at all %d\n" % i
+                sent.append(("bad_request", None))
+            else:
+                pad = b"x" * rng.randint(256, 600)
+                payload += b'{"op": "ping", "id": %d, "pad": "%s"}\n' \
+                    % (i, pad)
+                sent.append(("frame_too_large", None))
+        # dribble the whole payload in random chunks
+        for chunk in _random_chunks(rng, payload, max_cuts=25):
+            writer.write(chunk)
+            await writer.drain()
+        replies = [json.loads(await reader.readline()) for _ in sent]
+        writer.close()
+        await writer.wait_closed()
+        server.close()
+        await server.wait_closed()
+        return sent, replies
+
+    sent, replies = asyncio.run(main())
+    assert len(replies) == len(sent)  # exactly one response per line
+    # responses may arrive out of order (per-line tasks): match pings by
+    # echoed id and error lines by code count — nothing lost, nothing dup
+    want_pongs = {rid for kind, rid in sent if kind == "pong"}
+    got_pongs = {r["id"] for r in replies if r.get("ok")}
+    assert got_pongs == want_pongs
+    assert all(r["result"] == "pong" for r in replies if r.get("ok"))
+    for code in ("bad_request", "frame_too_large"):
+        want = sum(1 for kind, _ in sent if kind == code)
+        got = sum(1 for r in replies
+                  if not r.get("ok") and r["code"] == code)
+        assert got == want, code
+
+
 # -- token bucket -------------------------------------------------------------
 
 
