@@ -12,11 +12,15 @@ Flags mirror trec_eval:
 * ``-c`` — average over every query in the qrels; queries with no results
   contribute 0 to every measure (and their R to ``num_rel``).
 * ``-l N`` — relevance level: judgments >= N count as relevant (default 1).
-* ``-m MEASURE`` — repeatable measure selector: a family (``map``,
-  ``ndcg_cut``), a parameterized family (``P.5,10``), an output-style key
-  (``ndcg_cut_10``), or ``all`` (every supported measure, the default).
-  Aggregate-only measures (``gm_map``, the geometric-mean MAP) print a
-  summary line only — never per-query lines — exactly like trec_eval.
+* ``-J`` — judged-docs-only: unjudged retrieved documents are removed from
+  every ranking before scoring (trec_eval's ``-J``).
+* ``-m MEASURE`` — repeatable measure selector in either dialect: a
+  trec_eval family (``map``, ``ndcg_cut``), a parameterized family
+  (``P.5,10``), an output-style key (``ndcg_cut_10``), an ir-measures
+  spelling (``nDCG@10``, ``AP(rel=2)``, ``RBP(p=0.8)``), or ``all`` (every
+  supported measure, the default).  Aggregate-only measures (``gm_map``,
+  the geometric-mean MAP) print a summary line only — never per-query
+  lines — exactly like trec_eval.
 * ``--sharded`` — run the multi-device pipeline
   (``repro.distributed.sharded_evaluator``) instead of the single-device
   evaluator; results are bit-identical, so output does not change.
@@ -26,6 +30,10 @@ name left-justified to 22 columns, floats printed with 4 decimals and the
 count measures (``num_q``, ``num_ret``, ``num_rel``, ``num_rel_ret``) as
 integers.  In the summary, count measures are sums over queries; everything
 else is the arithmetic mean.  ``runid`` is the tag column of the run file.
+
+Print order, the integer/sum/aggregate-only measure sets, and the ``-c``
+missing-query contributions are all derived from
+:mod:`repro.core.registry` — the CLI holds no measure tables of its own.
 """
 
 from __future__ import annotations
@@ -36,22 +44,18 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import (RelevanceEvaluator, measures as M, supported_measures,
-                        trec)
+from repro.core import (RelevanceEvaluator, measures as M, registry,
+                        supported_measures, trec)
 
-#: summary/per-query print order (trec_eval prints its registry order; ours
-#: is fixed here so output is stable under any -m combination)
-FAMILY_ORDER = (
-    "num_ret", "num_rel", "num_rel_ret", "map", "gm_map", "Rprec", "bpref",
-    "recip_rank", "iprec_at_recall", "P", "recall", "ndcg", "ndcg_cut",
-    "map_cut", "success",
-)
+#: summary/per-query print order == registry declaration order (trec_eval
+#: prints its registry order; so do we, stable under any -m combination)
+FAMILY_ORDER = registry.family_order()
 
 #: measures printed as integers (trec_eval uses %ld for these)
-INT_MEASURES = frozenset({"num_q", "num_ret", "num_rel", "num_rel_ret"})
+INT_MEASURES = frozenset({"num_q"}) | registry.integer_keys()
 
 #: measures summarized by summation rather than the mean over queries
-SUM_MEASURES = frozenset({"num_ret", "num_rel", "num_rel_ret"})
+SUM_MEASURES = registry.sum_families()
 
 #: aggregate-only measures: suppressed from per-query (-q) blocks, and their
 #: summary is exp(mean(log contributions)) — trec_eval's geometric mean
@@ -59,10 +63,11 @@ AGGREGATE_ONLY = M.AGGREGATE_ONLY_MEASURES
 
 
 def ordered_keys(measures: Sequence[str]) -> List[str]:
-    """Output keys for a measure set, in trec_eval print order."""
-    # parse_measures merges repeated same-family selectors (-m P_5 -m P_10)
+    """Output keys for a measure set (either dialect), in print order."""
+    # canonicalize merges repeated same-family selectors (-m P_5 -m P@10)
     # into one entry with the union of params; this only reorders families.
-    parsed: Dict[str, tuple] = dict(M.parse_measures(measures))
+    # The rel= level (if any) is resolved again by the evaluator.
+    parsed: Dict[str, tuple] = dict(registry.canonicalize(measures)[0])
     keys: List[str] = []
     for fam in FAMILY_ORDER:
         if fam in parsed:
@@ -95,11 +100,13 @@ def _summarize(results: Dict[str, Dict[str, float]], keys: Sequence[str],
     n_missing = n_q - len(results)
     for k in keys:
         total = sum(res[k] for res in results.values())
-        if k == "num_rel" and complete:
+        contrib = registry.missing_contribution(k)
+        if contrib == "n_rel" and complete:
+            # a missing query still contributes its R to num_rel
             total += sum(
                 float(sum(r >= relevance_level for r in docs.values()))
                 for qid, docs in qrel.items() if qid not in results)
-        if k in AGGREGATE_ONLY:
+        elif contrib == "log_gm_min":
             # missing queries under -c have AP 0, clipped to GM_MIN
             total += np.log(M.GM_MIN) * n_missing
         summary[k] = total if k in SUM_MEASURES else total / denom
@@ -121,8 +128,13 @@ def add_measure_args(ap: argparse.ArgumentParser) -> None:
                     help="relevance level: judgment >= N is relevant "
                          "(default 1)")
     ap.add_argument("-m", dest="measures", action="append", metavar="MEASURE",
-                    help="measure family/key (repeatable; default: all "
-                         "supported measures)")
+                    help="measure family/key in either dialect — trec_eval "
+                         "(map, P.5,10, ndcg_cut_10) or ir-measures "
+                         "(AP, P@5, nDCG@10, RBP(p=0.8)) — repeatable; "
+                         "default: all supported measures")
+    ap.add_argument("-J", dest="judged_docs_only", action="store_true",
+                    help="judged docs only: remove unjudged retrieved "
+                         "documents from every ranking before scoring")
 
 
 def resolve_measures(selected: Optional[Sequence[str]]) -> List[str]:
@@ -159,7 +171,11 @@ def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
 
     qrel = trec.load_qrel(args.qrel_path)
     runid = trec.run_id(args.run_path)
-    ev = RelevanceEvaluator(qrel, selected, relevance_level=args.level)
+    try:
+        ev = RelevanceEvaluator(qrel, selected, relevance_level=args.level,
+                                judged_docs_only=args.judged_docs_only)
+    except ValueError as e:
+        ap.error(str(e))
     # Tokenized ingest: run file → flat arrays → RunBuffer (no dict-of-dicts).
     qids_arr, docnos, scores = trec.load_run_arrays(args.run_path)
     # trec_eval rejects duplicate (qid, docno) rows; the array fast path does
@@ -187,7 +203,10 @@ def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
                 continue
             lines.extend(
                 format_line(k, qid, results[qid][k]) for k in pq_keys)
-    summary = _summarize(results, keys, qrel, args.complete, args.level)
+    # the evaluator resolved rel= annotations against -l; use its level so
+    # num_rel's missing-query R matches what was actually scored
+    summary = _summarize(results, keys, qrel, args.complete,
+                         ev.relevance_level)
     lines.append(format_line("runid", "all", runid))
     lines.append(format_line("num_q", "all", summary["num_q"]))
     lines.extend(format_line(k, "all", summary[k]) for k in keys)

@@ -395,11 +395,17 @@ class AsyncEvalClient:
         return await self._request("stats")
 
     async def register_qrel(self, qrel_id: str, qrel, measures=None,
-                            relevance_level=None, backend=None) -> dict:
-        """Intern a qrel server-side; returns the collection info dict."""
+                            relevance_level=None, backend=None,
+                            judged_docs_only=None) -> dict:
+        """Intern a qrel server-side; returns the collection info dict.
+
+        ``measures`` accepts either dialect (``"map"`` / ``"nDCG@10"``);
+        ``judged_docs_only`` mirrors trec_eval's ``-J``.
+        """
         return await self._request(
             "register_qrel", qrel_id=qrel_id, qrel=qrel, measures=measures,
-            relevance_level=relevance_level, backend=backend)
+            relevance_level=relevance_level, backend=backend,
+            judged_docs_only=judged_docs_only)
 
     async def register_run(self, qrel_id: str, run_id: str, run=None,
                            tokens=None) -> dict:

@@ -94,10 +94,12 @@ class EvalClient:
         return self._call(self._async.stats())
 
     def register_qrel(self, qrel_id: str, qrel, measures=None,
-                      relevance_level=None, backend=None) -> dict:
+                      relevance_level=None, backend=None,
+                      judged_docs_only=None) -> dict:
         return self._call(self._async.register_qrel(
             qrel_id, qrel, measures=measures,
-            relevance_level=relevance_level, backend=backend))
+            relevance_level=relevance_level, backend=backend,
+            judged_docs_only=judged_docs_only))
 
     def register_run(self, qrel_id: str, run_id: str, run=None,
                      tokens=None) -> dict:

@@ -10,10 +10,12 @@ with the in-JAX paired statistics of :mod:`repro.stats`::
 
 Flags:
 
-* ``-m MEASURE`` — repeatable, exactly like the main CLI (``repro.cli``):
+* ``-m MEASURE`` — repeatable, exactly like the main CLI (``repro.cli``),
+  in either dialect (``map`` or ``AP``, ``ndcg_cut_10`` or ``nDCG@10``):
   one comparison block per resulting output key, default ``map``
   (``all`` expands to every supported measure).
-* ``-l N`` — relevance level, as everywhere else.
+* ``-l N`` — relevance level, as everywhere else; ``-J`` removes unjudged
+  retrieved documents before scoring, as in the main CLI.
 * ``--test {t,permutation,both}`` — which paired test(s) to run
   (default ``t``; the permutation test Monte-Carlo samples
   ``--permutations`` sign flips with ``--seed``).
@@ -121,7 +123,7 @@ def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
         result = evaluate_sweep(
             qrel, runs, measures=selected, relevance_level=args.level,
             backend="sharded" if args.sharded else "single",
-            run_names=names)
+            run_names=names, judged_docs_only=args.judged_docs_only)
     except ValueError as e:
         ap.error(str(e))
 

@@ -4,6 +4,8 @@ Public API mirrors pytrec_eval:
 
 * :class:`RelevanceEvaluator` — dict-in / dict-out evaluation.
 * :data:`supported_measures` — measure families available.
+* ``registry`` — the declarative measure table (both dialects) everything
+  else derives from.
 * ``measures`` / ``streaming`` — batched + in-loop device entry points.
 """
 
@@ -19,12 +21,15 @@ from repro.core.measures import (
     batch_from_flat,
     compute_measures,
     compute_measures_jit,
+    compute_measures_topk,
+    compute_measures_topk_jit,
     finalize_aggregates,
     measure_keys,
     parse_measures,
 )
+from repro.core.registry import MeasureError, MeasureSpec, REGISTRY
 from repro.core.sweep import SweepResult, evaluate_sweep
-from repro.core import streaming, trec, sorting
+from repro.core import registry, streaming, trec, sorting
 
 __all__ = [
     "RelevanceEvaluator",
@@ -42,9 +47,15 @@ __all__ = [
     "batch_from_dense",
     "compute_measures",
     "compute_measures_jit",
+    "compute_measures_topk",
+    "compute_measures_topk_jit",
     "finalize_aggregates",
     "measure_keys",
     "parse_measures",
+    "MeasureError",
+    "MeasureSpec",
+    "REGISTRY",
+    "registry",
     "streaming",
     "trec",
     "sorting",

@@ -62,6 +62,7 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import measures as M
+from repro.core import registry
 from repro.kernels import bucketing
 
 RunType = Mapping[str, Mapping[str, float]]
@@ -173,15 +174,27 @@ class RelevanceEvaluator:
         measures: Iterable[str],
         relevance_level: int = 1,
         densify: str = "vectorized",
+        judged_docs_only: bool = False,
+        judged_docs_only_flag: Optional[bool] = None,
     ):
         if not isinstance(query_relevance, Mapping):
             raise TypeError("query_relevance must be a mapping qid -> {doc: rel}")
         if densify not in ("vectorized", "reference"):
             raise ValueError(f"unknown densify path {densify!r}")
         self.densify_path = densify
-        self.relevance_level = float(relevance_level)
-        self.measures = M.parse_measures(tuple(measures))
-        self.measure_keys = M.measure_keys(tuple(measures))
+        # upstream pytrec_eval spells the constructor flag judged_docs_only
+        # (trec_eval -J); accept the _flag alias some callers use.
+        if judged_docs_only_flag is not None:
+            judged_docs_only = bool(judged_docs_only_flag)
+        self.judged_docs_only = bool(judged_docs_only)
+        # Measures may arrive in either dialect; rel= annotations (AP(rel=2))
+        # resolve the relevance level together with the explicit argument.
+        self.measures, self.relevance_level = registry.canonicalize(
+            tuple(measures), relevance_level)
+        self.measure_keys = registry.keys_for(self.measures)
+        #: max ranking depth the measure set reads (None = full sort needed);
+        #: drives the top-k kernel routing in :meth:`batch_from_buffer` users
+        self._topk_depth = registry.topk_depth(self.measures)
         # Normalize keys only when needed (the copy is O(total judgments);
         # pytrec_eval's C conversion pays the same cost, ~10× cheaper).
         needs_norm = any(
@@ -311,8 +324,14 @@ class RelevanceEvaluator:
         out: Dict[str, Dict[str, float]] = {}
         for lo in range(0, len(qids), self.chunk_queries):
             chunk = qids[lo:lo + self.chunk_queries]
-            batch, _ = self._densify(run, chunk)
-            self._emit(out, chunk, batch)
+            if self.densify_path == "reference":
+                batch, _ = self._densify(run, chunk)
+                self._emit(out, chunk, batch)
+            else:
+                buf = self._tokenize_chunk(run, chunk)
+                topk = self._route_topk(buf)
+                batch = self.batch_from_buffer(buf, topk_layout=topk)
+                self._emit(out, chunk, batch, topk=topk)
         return out
 
     def evaluate_many(
@@ -454,7 +473,8 @@ class RelevanceEvaluator:
                          scores)
 
     def batch_from_buffer(self, buf: RunBuffer, scores=None,
-                          q_multiple: int = 1) -> M.EvalBatch:
+                          q_multiple: int = 1,
+                          topk_layout: bool = False) -> M.EvalBatch:
         """Padded ``EvalBatch`` from a buffer (numeric work only).
 
         Feed the result to ``core.measures.compute_measures_jit`` or to
@@ -466,6 +486,14 @@ class RelevanceEvaluator:
         device mesh.  ``repro.distributed.sharded_evaluator`` passes the mesh
         size here; padded queries carry ``query_mask == False`` and are
         ignored by every measure and aggregate.
+
+        ``topk_layout`` scatters each document at column == its tiebreak
+        rank (a permutation of ``[0, count)``, so the counts-derived mask
+        stays valid).  Under that layout the top-k kernel's
+        smaller-index-wins tie rule IS trec_eval's tie rule, which is what
+        ``core.measures.compute_measures_topk`` requires; the layout is
+        measure-invariant for the full-sort path (``tiebreak`` still rides
+        along as its own field).
         """
         if scores is not None:
             buf = buf.with_scores(scores)
@@ -477,13 +505,32 @@ class RelevanceEvaluator:
         max_j = int(jcounts.max()) if nq else 0
         q_pad = bucketing.bucket_queries(nq, multiple=q_multiple)
         return M.batch_from_flat(
-            qidx=buf.qidx, col=buf.col, scores=buf.scores,
+            qidx=buf.qidx,
+            col=buf.tiebreak if topk_layout else buf.col,
+            scores=buf.scores,
             tiebreak=buf.tiebreak, rel=buf.rel, judged=buf.judged,
             ideal_rows=self._ideal[buf.gidx],
             n_rel=self._n_rel[buf.gidx],
             n_judged_nonrel=self._n_nonrel[buf.gidx],
             n_queries=nq, q_pad=q_pad, d_pad=_bucket(max_d),
             j_pad=_bucket(max(max_j, 1)), counts=buf.counts)
+
+    def _route_topk(self, buf: RunBuffer) -> bool:
+        """Should this buffer take the top-k kernel path?
+
+        Yes iff every requested measure is depth-bounded (ROADMAP item 2:
+        ``*_cut`` / ``@k`` measures stop sorting the full document axis) and
+        the padded document axis is wide enough that ranking only the top-k
+        prefix beats the full multi-key sort.  Results are bit-identical
+        either way (parity-tested in tests/test_measures.py).
+        """
+        if self._topk_depth is None or not len(buf):
+            return False
+        from repro.kernels import topk as _tk
+
+        d_pad = _bucket(int(buf.counts.max()))
+        k2 = _tk._next_pow2(self._topk_depth, 128)
+        return d_pad > max(2 * k2, 512)
 
     def evaluate_buffer(self, buf: RunBuffer,
                         scores=None) -> Dict[str, Dict[str, float]]:
@@ -505,9 +552,10 @@ class RelevanceEvaluator:
         """
         if not len(buf):
             return {}
-        batch = self.batch_from_buffer(buf, scores)
+        topk = self._route_topk(buf)
+        batch = self.batch_from_buffer(buf, scores, topk_layout=topk)
         out: Dict[str, Dict[str, float]] = {}
-        self._emit(out, buf.qids, batch)
+        self._emit(out, buf.qids, batch, topk=topk)
         return out
 
     def evaluate_buffers(
@@ -548,9 +596,12 @@ class RelevanceEvaluator:
         if not nonempty:
             return [{} for _ in bufs]
         big = concat_run_buffers(nonempty)
-        batch = self.batch_from_buffer(big)
-        per_query = M.compute_measures_jit(batch, self.measures,
-                                           self.relevance_level)
+        topk = self._route_topk(big)
+        batch = self.batch_from_buffer(big, topk_layout=topk)
+        compute = (M.compute_measures_topk_jit if topk
+                   else M.compute_measures_jit)
+        per_query = compute(batch, self.measures, self.relevance_level,
+                            self.judged_docs_only)
         cols = {k: np.asarray(per_query[k])[:len(big.qids)].tolist()
                 for k in self.measure_keys}
         results: List[Dict[str, Dict[str, float]]] = []
@@ -791,9 +842,11 @@ class RelevanceEvaluator:
     # -- output ---------------------------------------------------------------
 
     def _emit(self, out: Dict[str, Dict[str, float]], qids: Sequence[str],
-              batch: M.EvalBatch) -> None:
-        per_query = M.compute_measures_jit(batch, self.measures,
-                                           self.relevance_level)
+              batch: M.EvalBatch, topk: bool = False) -> None:
+        compute = (M.compute_measures_topk_jit if topk
+                   else M.compute_measures_jit)
+        per_query = compute(batch, self.measures, self.relevance_level,
+                            self.judged_docs_only)
         nq = len(qids)
         cols = {k: np.asarray(per_query[k])[:nq].tolist()
                 for k in self.measure_keys}

@@ -33,43 +33,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import sorting
+from repro.core import registry, sorting
 
-DEFAULT_CUTOFFS: Tuple[int, ...] = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
-SUCCESS_CUTOFFS: Tuple[int, ...] = (1, 5, 10)
-IPREC_LEVELS: Tuple[float, ...] = tuple(round(0.1 * i, 1) for i in range(11))
+# Shared measure constants live in the declarative registry; re-exported
+# here because every engine historically imports them from this module.
+DEFAULT_CUTOFFS: Tuple[int, ...] = registry.DEFAULT_CUTOFFS
+SUCCESS_CUTOFFS: Tuple[int, ...] = registry.SUCCESS_CUTOFFS
+IPREC_LEVELS: Tuple[float, ...] = registry.IPREC_LEVELS
 
 #: trec_eval's MIN_GEO_MEAN: per-query AP is clipped to this before the log
 #: so queries with AP == 0 do not collapse the geometric mean to 0.
-GM_MIN: float = 1e-5
+GM_MIN: float = registry.GM_MIN
 
-#: Measure families understood by this module (pytrec_eval-compatible ids).
-SUPPORTED_MEASURES = frozenset(
-    {
-        "map",
-        "gm_map",
-        "ndcg",
-        "recip_rank",
-        "Rprec",
-        "bpref",
-        "P",
-        "recall",
-        "ndcg_cut",
-        "map_cut",
-        "success",
-        "iprec_at_recall",
-        "num_ret",
-        "num_rel",
-        "num_rel_ret",
-    }
-)
+#: Measure families understood by this module (pytrec_eval-compatible ids),
+#: derived from the declarative registry (``repro.core.registry``).
+SUPPORTED_MEASURES = registry.supported_families()
 
 #: Aggregate-only measures: the per-query column is a *log contribution*
 #: (``log(max(AP, GM_MIN))`` for ``gm_map``, exactly what trec_eval
 #: accumulates per query); the user-facing value is the geometric mean
 #: ``exp(mean(column))`` produced by :func:`finalize_aggregates`.  The CLI
 #: suppresses these keys from per-query (-q) output, like trec_eval does.
-AGGREGATE_ONLY_MEASURES = frozenset({"gm_map"})
+AGGREGATE_ONLY_MEASURES = registry.aggregate_only_families()
 
 
 class EvalBatch(NamedTuple):
@@ -108,8 +93,15 @@ class SortedBatch(NamedTuple):
 _PACK_OFFSET = 4.0  # rel values ≥ -4 supported (trec_eval uses ≥ -2)
 
 
-def sort_batch(batch: EvalBatch, relevance_level: float = 1.0) -> SortedBatch:
+def sort_batch(batch: EvalBatch, relevance_level: float = 1.0,
+               judged_only: bool = False) -> SortedBatch:
     """Rank every query's documents under trec_eval ordering.
+
+    ``judged_only`` implements trec_eval's ``-J`` (pytrec_eval's
+    ``judged_docs_only`` constructor flag): unjudged retrieved documents are
+    removed from the ranking before any measure sees it.  Dropped documents
+    sort to the tail with rel=0/judged=0 — indistinguishable from padding,
+    hence inert for every measure — and ``n_ret`` counts only the kept docs.
 
     Perf note (§Perf iteration C2): (rel, judged) ride the sort as ONE packed
     f32 payload — ``(rel+4)·2 + judged`` — and the mask is not sorted at all
@@ -119,12 +111,13 @@ def sort_batch(batch: EvalBatch, relevance_level: float = 1.0) -> SortedBatch:
     """
     assert relevance_level >= 1.0 or relevance_level > 0, \
         "packed-payload sort assumes relevance_level > 0"
-    packed = (batch.rel * jnp.asarray(batch.mask, jnp.float32)
+    mask = batch.mask & batch.judged if judged_only else batch.mask
+    packed = (batch.rel * jnp.asarray(mask, jnp.float32)
               + _PACK_OFFSET) * 2.0 + jnp.asarray(
-        batch.judged & batch.mask, jnp.float32)
-    packed = jnp.where(batch.mask, packed, _PACK_OFFSET * 2.0)
+        batch.judged & mask, jnp.float32)
+    packed = jnp.where(mask, packed, _PACK_OFFSET * 2.0)
     (packed_s,) = sorting.rank_sort(
-        batch.scores, batch.tiebreak, batch.mask, packed)[1:]
+        batch.scores, batch.tiebreak, mask, packed)[1:]
     judged_s = packed_s - 2.0 * jnp.floor(packed_s / 2.0)
     rel_s = jnp.floor(packed_s / 2.0) - _PACK_OFFSET
     binrel = jnp.where(rel_s >= relevance_level, 1.0, 0.0)
@@ -138,7 +131,7 @@ def sort_batch(batch: EvalBatch, relevance_level: float = 1.0) -> SortedBatch:
         ideal_rel=batch.ideal_rel,
         n_rel=batch.n_rel,
         n_judged_nonrel=batch.n_judged_nonrel,
-        n_ret=jnp.sum(batch.mask.astype(jnp.float32), axis=-1),
+        n_ret=jnp.sum(mask.astype(jnp.float32), axis=-1),
         query_mask=batch.query_mask,
     )
 
@@ -276,143 +269,187 @@ def iprec_at_recall(s: SortedBatch, level: float) -> jax.Array:
     return jnp.where(s.n_rel > 0, val, 0.0)
 
 
+def num_ret(s: SortedBatch) -> jax.Array:
+    return s.n_ret
+
+
+def num_rel(s: SortedBatch) -> jax.Array:
+    return s.n_rel
+
+
+def num_rel_ret(s: SortedBatch) -> jax.Array:
+    return s.cum_rel[:, -1]
+
+
+def judged_at(s: SortedBatch, k: int) -> jax.Array:
+    """Judged@k: fraction of the top k that appears in the qrels.
+
+    Like trec_eval's P@k, the denominator is always k — queries retrieving
+    fewer than k documents are penalized, not renormalized.
+    """
+    cum_judged = jnp.cumsum(s.judged, axis=-1)
+    return _at_rank(cum_judged, k) / float(k)
+
+
+def rbp(s: SortedBatch, p: float) -> jax.Array:
+    """Rank-biased precision (Moffat & Zobel): ``(1-p)·Σ rel_i·p^(i-1)``.
+
+    Binary relevance (>= the relevance level), geometric rank discount with
+    persistence ``p``.  Documents beyond the retrieved depth contribute 0,
+    i.e. this is the base RBP score without the residual.
+    """
+    d = s.binrel.shape[-1]
+    weights = (1.0 - p) * jnp.power(p, _ranks(d) - 1.0)
+    return jnp.sum(s.binrel * weights, axis=-1)
+
+
+def err_at(s: SortedBatch, k: int) -> jax.Array:
+    """Expected reciprocal rank at k (Chapelle et al.'s cascade model).
+
+    ``ERR@k = Σ_{i<=k} (1/i) · R_i · Π_{j<i} (1 − R_j)`` with stop
+    probability ``R_i = (2^max(rel_i, 0) − 1) / 2^G``.  ``G`` is the
+    per-query maximum qrel grade (min 1) — each query's own grade scale
+    normalizes its gains, the convention documented in docs/MEASURES.md.
+    Unjudged documents have rel 0, hence stop probability 0.
+    """
+    d = s.rel.shape[-1]
+    kk = min(int(k), d)
+    g = jnp.maximum(s.ideal_rel[:, 0], 1.0)[:, None]
+    # Static slice to the cutoff BEFORE reducing: the reduction width is
+    # then k regardless of document padding, so the top-k path (d == k) and
+    # the full-sort path produce bit-identical sums (no reassociation).
+    rel_k = s.rel[:, :kk]
+    stop = (jnp.power(2.0, jnp.maximum(rel_k, 0.0)) - 1.0) / jnp.power(2.0, g)
+    no_stop = jnp.cumprod(1.0 - stop, axis=-1)
+    prior = jnp.concatenate(
+        [jnp.ones_like(no_stop[:, :1]), no_stop[:, :-1]], axis=-1)
+    return jnp.sum(stop * prior / _ranks(kk), axis=-1)
+
+
 # ---------------------------------------------------------------------------
-# Measure-set plumbing.
+# Measure-set plumbing (delegated to the declarative registry).
 # ---------------------------------------------------------------------------
 
 
 def parse_measures(measures: Sequence[str]) -> Tuple[Tuple[str, Tuple[float, ...]], ...]:
-    """Normalize pytrec_eval-style measure strings into (family, params).
+    """Normalize measure strings (either dialect) into (family, params).
 
-    Accepts family names (``"ndcg_cut"`` → all default cutoffs), explicit
-    params (``"P.5,10"``), and pytrec_eval output-style ids (``"P_5"``,
-    ``"ndcg_cut_10"``).  Selectors naming the same family merge into one
-    entry with the union of their params (sorted), so a repeated measure
-    list like ``("P_5", "P.5,10")`` yields each output key exactly once —
-    the contract the sweep/compare CLI's repeatable ``-m`` flag relies on.
+    Accepts trec_eval-dialect family names (``"ndcg_cut"`` → all default
+    cutoffs), explicit params (``"P.5,10"``), pytrec_eval output-style ids
+    (``"P_5"``, ``"ndcg_cut_10"``), and ir-measures-dialect strings
+    (``"nDCG@10"``, ``"P@5"``, ``"RBP(p=0.8)"``).  Selectors naming the
+    same family merge into one entry with the union of their params
+    (sorted), so a repeated measure list like ``("P_5", "P.5,10", "P@20")``
+    yields each output key exactly once — the contract the sweep/compare
+    CLI's repeatable ``-m`` flag relies on.  Delegates to
+    :mod:`repro.core.registry`; ``rel=`` annotations require the
+    level-aware :func:`registry.canonicalize`.
     """
-    out = []
-    for m in sorted(set(measures)):
-        if m in ("map", "gm_map", "ndcg", "recip_rank", "Rprec", "bpref",
-                 "num_ret", "num_rel", "num_rel_ret"):
-            out.append((m, ()))
-            continue
-        fam, params = m, None
-        # Output-style "P_5" / "ndcg_cut_10" / "iprec_at_recall_0.10" —
-        # checked before the "." split so iprec keys (whose level contains a
-        # dot) round-trip through parse_measures.
-        for known in ("ndcg_cut", "map_cut", "iprec_at_recall", "P",
-                      "recall", "success"):
-            if m.startswith(known + "_"):
-                fam = known
-                params = (float(m[len(known) + 1:]),)
-                break
-        if params is None and "." in m:
-            fam, _, arg = m.partition(".")
-            params = tuple(float(x) for x in arg.split(","))
-        if fam not in SUPPORTED_MEASURES:
-            raise ValueError(f"unsupported measure: {m!r}")
-        if params is None:
-            if fam == "success":
-                params = tuple(float(k) for k in SUCCESS_CUTOFFS)
-            elif fam == "iprec_at_recall":
-                params = IPREC_LEVELS
-            else:
-                params = tuple(float(k) for k in DEFAULT_CUTOFFS)
-        out.append((fam, params))
-    merged: Dict[str, Tuple[float, ...]] = {}
-    for fam, params in out:
-        merged[fam] = tuple(sorted(set(merged.get(fam, ()) + params)))
-    return tuple(sorted(merged.items()))
+    return registry.parse_measures(measures)
 
 
 def family_keys(fam: str, params: Tuple[float, ...]) -> Tuple[str, ...]:
-    """Output keys for one parsed (family, params) entry.
-
-    Owns the pytrec_eval key-format rules (``iprec_at_recall`` levels print
-    with two decimals, cutoffs as integers) for every consumer — the
-    evaluator via :func:`measure_keys` and the CLI's print ordering.
-    """
-    if not params:
-        return (fam,)
-    if fam == "iprec_at_recall":
-        return tuple(f"{fam}_{p:.2f}" for p in params)
-    return tuple(f"{fam}_{int(p)}" for p in params)
+    """Output keys for one parsed (family, params) entry (registry rules)."""
+    return registry.family_keys(fam, params)
 
 
 def measure_keys(measures: Sequence[str]) -> Tuple[str, ...]:
     """The pytrec_eval-style output keys produced for a measure set."""
-    keys = []
-    for fam, params in parse_measures(measures):
-        keys.extend(family_keys(fam, params))
-    return tuple(keys)
+    return registry.measure_keys(measures)
+
+
+def _mask_queries(out: Dict[str, jax.Array], s: SortedBatch) -> Dict[str, jax.Array]:
+    zero = jnp.zeros_like(s.n_rel)
+    qm = s.query_mask
+    return {k: jnp.where(qm, v, zero) for k, v in out.items()}
 
 
 def compute_measures(
     batch: EvalBatch,
     measures: Tuple[Tuple[str, Tuple[float, ...]], ...],
     relevance_level: float = 1.0,
+    judged_only: bool = False,
 ) -> Dict[str, jax.Array]:
     """Compute every requested measure for every query in the batch.
 
     ``measures`` must be the output of :func:`parse_measures` (hashable, so
-    this function can be jitted with ``static_argnums``).  Returns a dict of
+    this function can be jitted with ``static_argnums``).  Column dispatch
+    is table-driven by :mod:`repro.core.registry`.  Returns a dict of
     pytrec_eval-style keys to ``[Q]`` float32 vectors.
     """
-    s = sort_batch(batch, relevance_level)
-    out: Dict[str, jax.Array] = {}
-    for fam, params in measures:
-        if fam == "map":
-            out["map"] = average_precision(s)
-        elif fam == "gm_map":
-            out["gm_map"] = gm_map_contrib(s)
-        elif fam == "ndcg":
-            out["ndcg"] = ndcg(s)
-        elif fam == "recip_rank":
-            out["recip_rank"] = reciprocal_rank(s)
-        elif fam == "Rprec":
-            out["Rprec"] = r_precision(s)
-        elif fam == "bpref":
-            out["bpref"] = bpref(s)
-        elif fam == "num_ret":
-            out["num_ret"] = s.n_ret
-        elif fam == "num_rel":
-            out["num_rel"] = s.n_rel
-        elif fam == "num_rel_ret":
-            out["num_rel_ret"] = s.cum_rel[:, -1]
-        elif fam == "P":
-            for k in params:
-                out[f"P_{int(k)}"] = precision_at(s, int(k))
-        elif fam == "recall":
-            for k in params:
-                out[f"recall_{int(k)}"] = recall_at(s, int(k))
-        elif fam == "success":
-            for k in params:
-                out[f"success_{int(k)}"] = success_at(s, int(k))
-        elif fam == "ndcg_cut":
-            for k in params:
-                out[f"ndcg_cut_{int(k)}"] = ndcg_cut(s, int(k))
-        elif fam == "map_cut":
-            for k in params:
-                out[f"map_cut_{int(k)}"] = map_cut(s, int(k))
-        elif fam == "iprec_at_recall":
-            for lv in params:
-                out[f"iprec_at_recall_{lv:.2f}"] = iprec_at_recall(s, lv)
-        else:  # pragma: no cover - guarded by parse_measures
-            raise ValueError(fam)
-    zero = jnp.zeros_like(s.n_rel)
-    qm = s.query_mask
-    return {k: jnp.where(qm, v, zero) for k, v in out.items()}
+    s = sort_batch(batch, relevance_level, judged_only)
+    return _mask_queries(registry.apply_columns(s, measures), s)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def compute_measures_jit(batch, measures, relevance_level=1.0):
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def compute_measures_jit(batch, measures, relevance_level=1.0,
+                         judged_only=False):
     # Lazy import: repro.kernels pulls in this module at its own import time.
     # bucketing itself is dependency-free, so the in-body import is cheap and
     # cycle-safe; the call runs at trace time only (once per signature).
     from repro.kernels import bucketing
     bucketing.record_trace("measure_core")
-    return compute_measures(batch, measures, relevance_level)
+    return compute_measures(batch, measures, relevance_level, judged_only)
+
+
+def compute_measures_topk(
+    batch: EvalBatch,
+    measures: Tuple[Tuple[str, Tuple[float, ...]], ...],
+    relevance_level: float = 1.0,
+    judged_only: bool = False,
+) -> Dict[str, jax.Array]:
+    """Depth-bounded measure computation via the top-k kernel.
+
+    Requires every family in ``measures`` to be depth-bounded
+    (``registry.topk_depth(measures) is not None``) AND the batch to use the
+    **tiebreak-column layout**: each document scattered at column ==
+    tiebreak rank (``RelevanceEvaluator.batch_from_buffer(...,
+    topk_layout=True)``).  Under that layout the top-k kernel's
+    smaller-index-wins tie rule IS trec_eval's smaller-tiebreak-wins rule,
+    so the selected prefix equals the full sort's first k rows exactly, and
+    every bounded column is bit-identical to :func:`compute_measures` —
+    without ever sorting the full document axis.
+    """
+    from repro.kernels import ops
+
+    depth = registry.topk_depth(measures)
+    assert depth is not None, "top-k path needs depth-bounded measures"
+    q, d = batch.scores.shape
+    k = min(depth, d)
+    eff = batch.mask & batch.judged if judged_only else batch.mask
+    scores_m = jnp.where(eff, batch.scores, -jnp.inf)
+    _, idx = ops.topk(scores_m, k)
+    in_range = (idx >= 0) & (idx < d)
+    idx_c = jnp.clip(idx, 0, d - 1)
+    valid = in_range & jnp.take_along_axis(eff, idx_c, axis=-1)
+    rel_s = jnp.where(valid, jnp.take_along_axis(batch.rel, idx_c, axis=-1),
+                      0.0)
+    judged_s = jnp.where(
+        valid, jnp.take_along_axis(batch.judged, idx_c, axis=-1),
+        False).astype(jnp.float32)
+    binrel = jnp.where(rel_s >= relevance_level, 1.0, 0.0) * valid
+    s = SortedBatch(
+        rel=rel_s,
+        binrel=binrel,
+        judged=judged_s,
+        mask=jnp.ones_like(rel_s),
+        cum_rel=jnp.cumsum(binrel, axis=-1),
+        ideal_rel=batch.ideal_rel,
+        n_rel=batch.n_rel,
+        n_judged_nonrel=batch.n_judged_nonrel,
+        n_ret=jnp.sum(eff.astype(jnp.float32), axis=-1),
+        query_mask=batch.query_mask,
+    )
+    return _mask_queries(registry.apply_columns(s, measures), s)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def compute_measures_topk_jit(batch, measures, relevance_level=1.0,
+                              judged_only=False):
+    from repro.kernels import bucketing
+    bucketing.record_trace("measure_core_topk")
+    return compute_measures_topk(batch, measures, relevance_level,
+                                 judged_only)
 
 
 def aggregate(per_query: Dict[str, jax.Array], query_mask: jax.Array) -> Dict[str, jax.Array]:

@@ -178,6 +178,28 @@ def compute_measures_ranked(
             out["num_rel"] = r
         elif fam == "num_rel_ret":
             out["num_rel_ret"] = jnp.sum(rel_ret, axis=-1)
+        elif fam == "judged":
+            # every doc in the top k that is judged IS a row of this matrix
+            for k in params:
+                out[f"judged_{int(k)}"] = jnp.sum(
+                    retrieved * (ranks <= k), axis=-1) / float(k)
+        elif fam == "rbp":
+            for p in params:
+                w = jnp.power(p, jnp.minimum(ranks, INF_RANK) - 1.0)
+                out[f"rbp_{p:.2f}"] = (1.0 - p) * jnp.sum(rel_ret * w,
+                                                          axis=-1)
+        elif fam == "err":
+            # cascade model: unjudged docs have stop probability 0, so the
+            # prior over each judged doc is the product over the *judged*
+            # docs ranked above it — a [Q, J, J] pairwise log-sum
+            g = jnp.maximum(rb.ideal_rel[:, 0], 1.0)[:, None]
+            stop = (jnp.power(2.0, jnp.maximum(rb.judged_rel, 0.0)) - 1.0) \
+                / jnp.power(2.0, g) * retrieved
+            log_keep = jnp.log1p(-stop)
+            prior = jnp.exp(jnp.einsum("qj,qji->qi", log_keep, lt))
+            term = stop * prior / jnp.maximum(ranks, 1.0)
+            for k in params:
+                out[f"err_{int(k)}"] = jnp.sum(term * (ranks <= k), axis=-1)
         else:  # pragma: no cover
             raise ValueError(fam)
     zero = jnp.zeros_like(r)

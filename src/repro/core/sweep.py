@@ -26,7 +26,7 @@ from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import measures as M
+from repro.core import measures as M, registry
 from repro.core.evaluator import (RelevanceEvaluator, RunBuffer,
                                   concat_run_buffers)
 
@@ -47,9 +47,19 @@ class SweepResult(NamedTuple):
     table: np.ndarray
 
     def measure(self, key: str) -> np.ndarray:
-        """The ``[K, Q]`` per-query slice for one measure key."""
+        """The ``[K, Q]`` per-query slice for one measure key.
+
+        Accepts either dialect: ``"ndcg_cut_10"`` and ``"nDCG@10"`` name
+        the same column.
+        """
+        lookup = key
+        if lookup not in self.measure_keys:
+            try:
+                lookup = registry.canonical_key(key)[0]
+            except registry.MeasureError:
+                pass
         try:
-            m = self.measure_keys.index(key)
+            m = self.measure_keys.index(lookup)
         except ValueError:
             raise KeyError(
                 f"measure {key!r} not in sweep (have {self.measure_keys})"
@@ -119,14 +129,17 @@ def evaluate_sweep(
     relevance_level: int = 1,
     backend: str = "single",
     run_names: Optional[Sequence[str]] = None,
+    judged_docs_only: bool = False,
 ) -> SweepResult:
     """Evaluate K runs against one qrel as a single batched sweep.
 
     ``qrel_or_evaluator`` is a qrel mapping (a
     :class:`~repro.core.evaluator.RelevanceEvaluator` is built from it with
-    ``measures``/``relevance_level``) or an existing evaluator whose
-    interned state is reused (then ``measures``/``relevance_level`` must be
-    left at their defaults — the evaluator already owns them).
+    ``measures``/``relevance_level``/``judged_docs_only``) or an existing
+    evaluator whose interned state is reused (then those arguments must be
+    left at their defaults — the evaluator already owns them).  ``measures``
+    accepts either dialect (``"map"`` or ``"AP"``, ``"ndcg_cut_10"`` or
+    ``"nDCG@10"``); output keys are always canonical trec_eval keys.
 
     ``runs`` is a sequence or ``{name: run}`` mapping of K >= 1 runs, all
     dict runs (``{qid: {docno: score}}``) or all pre-tokenized
@@ -155,16 +168,17 @@ def evaluate_sweep(
     (1.0, 0.5)
     """
     if isinstance(qrel_or_evaluator, RelevanceEvaluator):
-        if measures is not None or relevance_level != 1:
+        if measures is not None or relevance_level != 1 or judged_docs_only:
             raise ValueError(
-                "pass measures/relevance_level only with a qrel mapping; "
-                "an evaluator already owns them")
+                "pass measures/relevance_level/judged_docs_only only with a "
+                "qrel mapping; an evaluator already owns them")
         ev = qrel_or_evaluator
     else:
         ev = RelevanceEvaluator(
             qrel_or_evaluator,
             measures if measures is not None else sorted(M.SUPPORTED_MEASURES),
-            relevance_level=relevance_level)
+            relevance_level=relevance_level,
+            judged_docs_only=judged_docs_only)
 
     if isinstance(runs, Mapping):
         if run_names is not None:
@@ -226,7 +240,8 @@ def evaluate_sweep(
         else:
             batch = ev.batch_from_buffer(big)
             per_query = M.compute_measures_jit(batch, ev.measures,
-                                               ev.relevance_level)
+                                               ev.relevance_level,
+                                               ev.judged_docs_only)
             rows = np.stack(
                 [np.asarray(per_query[key])[:len(big.qids)] for key in keys],
                 axis=-1)

@@ -146,6 +146,7 @@ class ShardedEvaluator:
 
     def _build_dispatch(self):
         level = self.evaluator.relevance_level
+        judged_only = self.evaluator.judged_docs_only
         keys = self.keys
         rest = self._rest
         rest_parsed = M.parse_measures(rest) if rest else ()
@@ -154,9 +155,11 @@ class ShardedEvaluator:
 
         def local_eval(batch: M.EvalBatch):
             # One shard: rank locally, one fused VMEM pass for all standard
-            # measures, reference core for the remainder.
+            # measures, reference core for the remainder.  Under
+            # judged_docs_only the sort drops unjudged docs to the tail as
+            # inert padding, so the fused columns stay correct unchanged.
             bucketing.record_trace("sharded_dispatch")  # once per signature
-            s = M.sort_batch(batch, level)
+            s = M.sort_batch(batch, level, judged_only)
             scal = ops.make_scalars(batch.n_rel, batch.n_judged_nonrel,
                                     batch.ideal_rel)
             cols = ops.fused_measures_cols(s.rel, s.judged, scal,
@@ -169,7 +172,8 @@ class ShardedEvaluator:
                 for i, name in enumerate(ops.FUSED_COLUMNS) if name in keys
             }
             if rest_parsed:
-                per_query.update(M.compute_measures(batch, rest_parsed, level))
+                per_query.update(M.compute_measures(batch, rest_parsed, level,
+                                                    judged_only))
             stacked = jnp.stack([per_query[k] for k in keys], axis=-1)
             # Aggregates: (sum, count) sufficient statistics, one psum.
             state = {k: jnp.zeros((), jnp.float32) for k in keys}

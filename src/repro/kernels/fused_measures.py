@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.registry import DEFAULT_RBP_P
 from repro.kernels import autotune, bucketing
 
 CUTOFFS = (5, 10, 15, 20, 30, 100, 200, 500, 1000)
@@ -38,8 +39,10 @@ COLUMNS = (
     + [f"ndcg_cut_{k}" for k in CUTOFFS]
     + [f"map_cut_{k}" for k in CUTOFFS]
     + [f"success_{k}" for k in SUCCESS_CUTOFFS]
+    + [f"judged_{k}" for k in CUTOFFS]
+    + [f"rbp_{DEFAULT_RBP_P:.2f}"]
 )
-OUT_WIDTH = 64  # lane-padded; len(COLUMNS) == 45
+OUT_WIDTH = 64  # lane-padded; len(COLUMNS) == 55
 
 
 def _sdiv(num, den):
@@ -133,8 +136,15 @@ def _kernel(rel_ref, judged_ref, scal_ref, out_ref, *, relevance_level):
         cols.append(_sdiv(_at(ap_cum, k), n_rel))
     for k in SUCCESS_CUTOFFS:
         cols.append(jnp.where(_at(cum, k) > 0, 1.0, 0.0))
+    # -- judged@k (exact: 0/1 counts, the shifted-add cumsum is integral) ----
+    cum_judged = _cumsum_lanes(judged)
+    for k in CUTOFFS:
+        cols.append(_at(cum_judged, k) / float(k))
+    # -- RBP, default persistence (same expression as core.measures.rbp) -----
+    rbp_w = (1.0 - DEFAULT_RBP_P) * jnp.power(DEFAULT_RBP_P, ranks - 1.0)
+    cols.append(jnp.sum(binrel * rbp_w, axis=-1))
 
-    out = jnp.stack(cols, axis=-1)  # [bq, 45]
+    out = jnp.stack(cols, axis=-1)  # [bq, 55]
     out = jnp.pad(out, ((0, 0), (0, OUT_WIDTH - out.shape[-1])))
     out_ref[...] = out
 
@@ -171,7 +181,7 @@ def _measure_call(q_pad: int, d: int, block_q: int, relevance_level: float,
 def fused_measures(rel_sorted, judged_sorted, scalars,
                    block_q: int | None = None,
                    relevance_level: float = 1.0, interpret: bool = True):
-    """All 45 trec_eval measures in one VMEM pass.  Returns [Q, 64] f32.
+    """All 55 standard measure columns in one VMEM pass.  Returns [Q, 64] f32.
 
     ``block_q=None`` (the default) consults the roofline-driven autotuner
     (``kernels.autotune.block_q_for``) — a deterministic function of the

@@ -125,14 +125,17 @@ def make_scalars(n_rel, n_judged_nonrel, ideal_rel):
 
 
 def evaluate_fused(batch: M.EvalBatch, relevance_level: float = 1.0,
-                   block_q=None, interpret=None):
+                   block_q=None, interpret=None, judged_only: bool = False):
     """EvalBatch → dict of per-query measures via the fused kernel path.
 
     Sort with the XLA multi-key sort (exact trec_eval order), then one fused
     VMEM pass for all measures.  This is the optimized beyond-paper engine;
     `core.measures.compute_measures` is the paper-faithful reference engine.
+    ``judged_only`` drops unjudged retrieved docs before ranking
+    (trec_eval ``-J``) — they sort to the tail as inert padding, so the
+    fused columns need no changes.
     """
-    s = M.sort_batch(batch, relevance_level)
+    s = M.sort_batch(batch, relevance_level, judged_only)
     scal = make_scalars(batch.n_rel, batch.n_judged_nonrel, batch.ideal_rel)
     cols = fused_measures_cols(s.rel, s.judged, scal,
                                relevance_level=relevance_level,

@@ -58,6 +58,9 @@ def fused_measures_ref(rel_sorted, judged_sorted, scalars,
         cols[f"ndcg_cut_{k}"] = safe_div(M.dcg(s, k), scalars[:, 3 + j])
     for k in FM.SUCCESS_CUTOFFS:
         cols[f"success_{k}"] = M.success_at(s, k)
+    for k in FM.CUTOFFS:
+        cols[f"judged_{k}"] = M.judged_at(s, k)
+    cols[f"rbp_{FM.DEFAULT_RBP_P:.2f}"] = M.rbp(s, FM.DEFAULT_RBP_P)
     out = jnp.stack([cols[name] for name in FM.COLUMNS], axis=-1)
     return jnp.pad(out, ((0, 0), (0, FM.OUT_WIDTH - out.shape[-1])))
 

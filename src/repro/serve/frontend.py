@@ -129,7 +129,8 @@ async def handle_request(service: EvaluationService, req: dict) -> dict:
             result = service.register_qrel(
                 req["qrel_id"], req["qrel"], measures=req.get("measures"),
                 relevance_level=_relevance_level(req),
-                backend=req.get("backend"))
+                backend=req.get("backend"),
+                judged_docs_only=bool(req.get("judged_docs_only", False)))
         elif op == "register_run":
             result = service.register_run(
                 req["qrel_id"], req["run_id"], run=req.get("run"),
@@ -409,7 +410,8 @@ def build_service(args) -> EvaluationService:
         info = service.register_qrel(
             args.qrel_id, trec.load_qrel(args.qrel),
             measures=cli.resolve_measures(args.measures),
-            relevance_level=args.level)
+            relevance_level=args.level,
+            judged_docs_only=args.judged_docs_only)
         print(f"registered qrel {info['qrel_id']!r}: "
               f"{info['n_queries']} queries, backend={info['backend']}",
               file=sys.stderr, flush=True)

@@ -136,26 +136,30 @@ class EvaluationService:
 
     def register_qrel(self, qrel_id: str, qrel, measures=None,
                       relevance_level: float = 1,
-                      backend: Optional[str] = None) -> Dict[str, object]:
+                      backend: Optional[str] = None,
+                      judged_docs_only: bool = False) -> Dict[str, object]:
         """Intern a qrel into a cached evaluator; returns collection info.
 
-        ``measures`` defaults to every supported family.
+        ``measures`` defaults to every supported family and accepts either
+        dialect (``"map"``/``"AP"``, ``"ndcg_cut_10"``/``"nDCG@10"``).
         ``relevance_level`` accepts int or float exactly like the CLI's
         ``-l`` flag — the single conversion to float happens inside
         :class:`RelevanceEvaluator`.  ``backend`` overrides the service
-        default for this collection (``auto``/``single``/``sharded``).
-        Re-registering a ``qrel_id`` replaces the collection (and drops its
-        registered runs).
+        default for this collection (``auto``/``single``/``sharded``);
+        ``judged_docs_only`` mirrors trec_eval's ``-J``.  Re-registering a
+        ``qrel_id`` replaces the collection (and drops its registered runs).
         """
         from repro.core import supported_measures
 
         resolved = self._select_backend(backend or self.default_backend)
         ev = RelevanceEvaluator(qrel, measures or supported_measures,
-                                relevance_level=relevance_level)
+                                relevance_level=relevance_level,
+                                judged_docs_only=judged_docs_only)
         self._collections.put(qrel_id, _Collection(qrel_id, ev, resolved))
         return {"qrel_id": qrel_id, "n_queries": len(ev._qrel),
                 "vocab_size": int(len(ev.vocab)), "backend": resolved,
                 "relevance_level": ev.relevance_level,
+                "judged_docs_only": ev.judged_docs_only,
                 "measure_keys": list(ev.measure_keys)}
 
     def register_run(self, qrel_id: str, run_id: str, run=None,
@@ -279,11 +283,19 @@ class EvaluationService:
     async def _compare(self, col: "_Collection", qrel_id: str, runs,
                        run_refs, measure, tests, n_permutations, seed,
                        alpha, run_names) -> Dict[str, object]:
+        from repro.core import registry
+
         ev = col.evaluator
+        measure = str(measure)
+        if measure not in ev.measure_keys:
+            # either dialect; a malformed string raises MeasureError (a
+            # ValueError → wire code "invalid") naming the offending input
+            measure = registry.canonical_key(measure)[0]
         if measure not in ev.measure_keys:
             raise ValueError(
-                f"measure {measure!r} is not computed by collection "
-                f"{qrel_id!r} (have: {list(ev.measure_keys)})")
+                f"measure {registry.both_dialects(measure)} is not computed "
+                f"by collection {qrel_id!r} "
+                f"(have: {list(ev.measure_keys)})")
         given = [n for n, v in (("runs", runs), ("run_refs", run_refs))
                  if v is not None]
         if len(given) != 1:

@@ -189,6 +189,36 @@ def test_wire_compare_roundtrip_and_error_codes(collection):
     assert len(ok["result"]["p"]) == 2
 
 
+def test_wire_compare_measure_dialects(collection):
+    """The compare op's ``measure`` field takes either dialect; errors for
+    uncomputed measures name both spellings, malformed ones the input."""
+    qrel, runs = collection
+
+    async def main():
+        svc = EvaluationService(window=0.01, backend="single")
+        svc.register_qrel("c", qrel, ("ndcg_cut", "map"))
+        out = {}
+        for key, measure in (("ir", "nDCG@10"), ("trec", "ndcg_cut_10"),
+                             ("missing", "RBP(p=0.8)"),
+                             ("malformed", "Bogus@5")):
+            out[key] = json.loads(await handle_line(svc, json.dumps(
+                {"op": "compare", "id": 1, "qrel_id": "c",
+                 "runs": {"a": runs[0], "b": runs[1]},
+                 "measure": measure})))
+        return out
+
+    out = asyncio.run(main())
+    assert out["ir"]["ok"] and out["trec"]["ok"]
+    assert out["ir"]["result"]["measure"] == "ndcg_cut_10"
+    assert out["ir"]["result"]["t"] == out["trec"]["result"]["t"]
+    miss = out["missing"]
+    assert not miss["ok"] and miss["code"] == "invalid"
+    assert "rbp_0.80" in miss["error"] and "RBP(p=0.8)" in miss["error"]
+    mal = out["malformed"]
+    assert not mal["ok"] and mal["code"] == "invalid"
+    assert "Bogus@5" in mal["error"]
+
+
 def test_wire_compare_serializes_infinite_t():
     """A dominated pair has t = ±inf; the JSON-lines reply must carry it
     (Python json emits the non-strict ``Infinity`` literal) and parse back

@@ -67,6 +67,15 @@ EXPECTED = {
         "iprec_at_recall_0.60": 0.5,
         "iprec_at_recall_0.70": 0.0,
         "iprec_at_recall_1.00": 0.0,
+        # 3 of the top 5 are judged (APPLE, CHERRY, BANANA; MANGO is not)
+        "judged_5": 3 / 5,
+        "judged_10": 3 / 10,
+        # RBP(p=0.8): relevant at ranks 1 and 4 → 0.2·(0.8^0 + 0.8^3)
+        "rbp_0.80": 0.2 * (1.0 + 0.8 ** 3),
+        # ERR: max grade 2 → stop = (2^g - 1)/4: [3/4, 0, 0, 1/4];
+        # ERR@5 = 3/4·1/1 + (1 - 3/4)·1/4·1/4 = 49/64
+        "err_5": 49 / 64,
+        "err_10": 49 / 64,
     },
     "q2": {
         "map": 0.5,
@@ -86,6 +95,10 @@ EXPECTED = {
         "iprec_at_recall_0.00": 0.5,
         "iprec_at_recall_0.50": 0.5,
         "iprec_at_recall_1.00": 0.5,
+        "judged_5": 2 / 5,  # both retrieved docs are judged
+        "rbp_0.80": 0.2 * 0.8,  # relevant at rank 2 only
+        # ERR: max grade 1 → stops [0, 1/2]; ERR@5 = 1/2 · 1/2
+        "err_5": 0.25,
     },
 }
 
@@ -150,6 +163,22 @@ def _trec_eval_reference(rels, R, N, ideal):
                 best = max(prec[i:])
                 break
         out[f"iprec_at_recall_{lv:.2f}"] = best if R else 0.0
+    # judged@k: fraction of the top k that carries a judgment (÷k, like P@k)
+    for k in DEFAULT_CUTOFFS:
+        out[f"judged_{k}"] = sum(r is not None for r in rels[:k]) / k
+    # RBP at the default persistence: sum of (1-p)·p^(rank-1) over relevant
+    p = 0.8
+    out["rbp_0.80"] = sum((1 - p) * p ** i for i, b in enumerate(binrel) if b)
+    # ERR (cascade model): stop probability (2^g - 1) / 2^G with the
+    # per-query max grade G taken from the ideal (sorted-desc) judgments
+    G = max(ideal[0] if ideal else 1, 1)
+    stops = [(2.0 ** max(r or 0, 0) - 1.0) / 2.0 ** G for r in rels]
+    for k in DEFAULT_CUTOFFS:
+        err, prior = 0.0, 1.0
+        for i, stop in enumerate(stops[:k]):
+            err += prior * stop / (i + 1)
+            prior *= 1.0 - stop
+        out[f"err_{k}"] = err
     return out
 
 
@@ -271,6 +300,50 @@ def test_gm_map_sharded_aggregate_matches():
     want = aggregate_results(ev.evaluate(run))
     assert res.aggregates["gm_map"] == pytest.approx(want["gm_map"], rel=1e-6)
     assert res.aggregates["gm_map"] == pytest.approx(0.5, abs=1e-5)
+
+
+def test_judged_docs_only_hand_computed():
+    """trec_eval -J on the fixture, ranked by hand.
+
+    q1 drops unjudged MANGO → ranking APPLE(2), CHERRY(0), BANANA(1):
+    AP = (1/1 + 2/3) / 3 = 5/9, P_5 = 2/5, num_ret = 3.  q2 has no
+    unjudged docs, so every value matches the plain run exactly.
+    """
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    ev = RelevanceEvaluator(qrel, {"map", "P", "num_ret", "judged"},
+                            judged_docs_only=True)
+    res = ev.evaluate(run)
+    assert res["q1"]["map"] == pytest.approx(5 / 9, abs=1e-6)
+    assert res["q1"]["P_5"] == pytest.approx(2 / 5, abs=1e-6)
+    assert res["q1"]["num_ret"] == 3.0
+    assert res["q1"]["judged_5"] == pytest.approx(3 / 5, abs=1e-6)
+    assert res["q2"]["map"] == pytest.approx(0.5, abs=1e-6)
+    assert res["q2"]["num_ret"] == 2.0
+
+    # upstream pytrec_eval spells the flag judged_docs_only_flag
+    alias = RelevanceEvaluator(qrel, {"map"}, judged_docs_only_flag=True)
+    assert alias.evaluate(run)["q1"]["map"] == res["q1"]["map"]
+
+    # the flag off reproduces the plain ranking (MANGO counted, AP = 0.5)
+    plain = RelevanceEvaluator(qrel, {"map"}).evaluate(run)
+    assert plain["q1"]["map"] == pytest.approx(0.5, abs=1e-6)
+
+
+def test_new_measures_ir_dialect_and_parameters():
+    """RBP/ERR/Judged requested via the ir-measures dialect, hand-checked.
+
+    RBP(p=0.5) on q1 (relevant at ranks 1, 4): 0.5·(1 + 0.5^3) = 0.5625.
+    """
+    qrel = trec.load_qrel(os.path.join(FIXTURES, "conformance.qrel"))
+    run = trec.load_run(os.path.join(FIXTURES, "conformance.run"))
+    ev = RelevanceEvaluator(
+        qrel, ["RBP(p=0.5)", "ERR@5", "Judged@10"])
+    res = ev.evaluate(run)
+    assert res["q1"]["rbp_0.50"] == pytest.approx(0.5625, abs=1e-6)
+    assert res["q1"]["err_5"] == pytest.approx(49 / 64, abs=1e-6)
+    assert res["q1"]["judged_10"] == pytest.approx(0.3, abs=1e-6)
+    assert res["q2"]["err_5"] == pytest.approx(0.25, abs=1e-6)
 
 
 def test_qrel_array_parse_roundtrip():

@@ -21,7 +21,7 @@ def _python_blocks(path):
 
 @pytest.mark.parametrize("path", ["README.md", "docs/ARCHITECTURE.md",
                                   "docs/SERVING.md", "docs/CONFORMANCE.md",
-                                  "docs/EXPERIMENTS.md"])
+                                  "docs/EXPERIMENTS.md", "docs/MEASURES.md"])
 def test_doc_code_blocks_run(path):
     blocks = _python_blocks(path)
     assert blocks, f"{path} has no python blocks?"
@@ -36,6 +36,7 @@ def test_doc_code_blocks_run(path):
 
 @pytest.mark.parametrize("module_name", [
     "repro.core.evaluator",
+    "repro.core.registry",
     "repro.core.trec",
     "repro.serve",
     "repro.serve.service",

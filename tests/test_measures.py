@@ -126,3 +126,76 @@ def test_supported_measures_property():
     ev = RelevanceEvaluator({"q": {"d": 1}}, supported_measures)
     res = ev.evaluate({"q": {"d": 1.0}})
     assert res["q"]["ndcg"] == 1.0
+
+
+# -- top-k kernel routing ----------------------------------------------------
+
+# Depth-bounded request (mixed dialects on purpose): max depth 20, so a
+# batch padded past max(2*next_pow2(20, 128), 512) = 512 docs routes to
+# the top-k kernel instead of the full multi-key sort.
+BOUNDED = ("P@5", "P_10", "recall_10", "nDCG@10", "map_cut_10",
+           "success_10", "Judged@10", "ERR@20", "num_ret", "num_rel")
+
+
+def _wide_case(nd=600, nq=3, seed=7):
+    rng = random.Random(seed)
+    run, qrel = {}, {}
+    for qi in range(nq):
+        qid = f"q{qi}"
+        run[qid] = {f"d{j:04d}": rng.random() for j in range(nd)}
+        qrel[qid] = {f"d{j:04d}": rng.randint(0, 2)
+                     for j in rng.sample(range(nd), 40)}
+    return run, qrel
+
+
+@pytest.mark.parametrize("judged_only", [False, True])
+def test_topk_route_taken_and_bit_identical(monkeypatch, judged_only):
+    from repro.core import measures as M
+
+    run, qrel = _wide_case()
+    ev = RelevanceEvaluator(qrel, BOUNDED, judged_docs_only=judged_only)
+    calls = []
+    real = M.compute_measures_topk_jit
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(M, "compute_measures_topk_jit", spy)
+    routed = ev.evaluate(run)
+    assert calls, "wide depth-bounded batch must take the top-k path"
+
+    ev_full = RelevanceEvaluator(qrel, BOUNDED, judged_docs_only=judged_only)
+    monkeypatch.setattr(type(ev_full), "_route_topk",
+                        lambda self, buf: False)
+    full = ev_full.evaluate(run)
+    assert routed.keys() == full.keys()
+    for qid in routed:
+        assert routed[qid].keys() == full[qid].keys()
+        for key in routed[qid]:
+            assert routed[qid][key] == full[qid][key], (qid, key)
+
+
+def test_full_depth_measure_disables_topk_route(monkeypatch):
+    from repro.core import measures as M
+
+    run, qrel = _wide_case(nq=1)
+    ev = RelevanceEvaluator(qrel, ("map", "P_10"))  # map needs the full sort
+    monkeypatch.setattr(
+        M, "compute_measures_topk_jit",
+        lambda *a, **k: pytest.fail("top-k path taken for full-depth map"))
+    ev.evaluate(run)
+
+    # narrow batches stay on the full sort too (top-k gains nothing there)
+    ev2 = RelevanceEvaluator({"q": {"d1": 1}}, ("P_10",))
+    assert not ev2._route_topk(ev2.tokenize_run({"q": {"d1": 1.0}}))
+
+
+def test_topk_path_preserves_trec_tie_rule(monkeypatch):
+    # equal scores: the tiebreak-column layout makes the kernel's
+    # smaller-index-wins rule equal trec_eval's larger-docno-wins rule
+    ev = RelevanceEvaluator({"q": {"dB": 1}}, ("P_5", "success_1"))
+    monkeypatch.setattr(type(ev), "_route_topk", lambda self, buf: True)
+    res = ev.evaluate({"q": {"dA": 1.0, "dB": 1.0}})
+    assert res["q"]["success_1"] == 1.0
+    assert res["q"]["P_5"] == pytest.approx(1 / 5)

@@ -16,7 +16,7 @@ from repro.core import ranked as R
 MEASURES = M.parse_measures(
     ("map", "ndcg", "ndcg_cut", "P", "recall", "recip_rank", "Rprec",
      "bpref", "success", "map_cut", "iprec_at_recall", "num_ret", "num_rel",
-     "num_rel_ret"))
+     "num_rel_ret", "judged", "rbp", "err"))
 
 RNG = np.random.default_rng(11)
 

@@ -1,0 +1,274 @@
+"""The declarative measure registry: dialects, rendering, derivations.
+
+Covers the registry contract every consumer leans on:
+
+* both dialects canonicalize to identical parsed selectors and keys;
+* ``rel=`` resolution (agreement, conflicts, the weak-default-1 rule);
+* unknown/malformed measures raise :class:`MeasureError` naming the input;
+* trec↔ir round-trip rendering (property-tested when hypothesis exists);
+* the CLI's derived print order / int / sum / aggregate-only sets;
+* depth bounds for the top-k routing decision;
+* the ``docs/MEASURES.md`` drift-gate machinery.
+"""
+
+import pytest
+
+from repro.core import registry
+from repro.core.registry import MeasureError
+
+
+# -- dialect equivalence -----------------------------------------------------
+
+
+@pytest.mark.parametrize("trec_m,ir_m", [
+    ("map", "AP"),
+    ("map", "MAP"),
+    ("gm_map", "GMAP"),
+    ("recip_rank", "RR"),
+    ("recip_rank", "MRR"),
+    ("Rprec", "Rprec"),
+    ("bpref", "Bpref"),
+    ("ndcg", "nDCG"),
+    ("P_5", "P@5"),
+    ("recall_10", "R@10"),
+    ("recall_10", "Recall@10"),
+    ("ndcg_cut_10", "nDCG@10"),
+    ("map_cut_20", "AP@20"),
+    ("success_1", "Success@1"),
+    ("judged_10", "Judged@10"),
+    ("err_20", "ERR@20"),
+    ("rbp_0.80", "RBP(p=0.8)"),
+    ("iprec_at_recall_0.10", "IPrec@0.10"),
+    ("num_ret", "NumRet"),
+    ("num_rel", "NumRel"),
+    ("num_rel_ret", "NumRelRet"),
+])
+def test_both_dialects_same_canonical_form(trec_m, ir_m):
+    assert registry.canonicalize([trec_m]) == registry.canonicalize([ir_m])
+    assert registry.canonical_key(ir_m)[0] == trec_m
+
+
+def test_ir_dialect_case_insensitive_names():
+    for spelling in ("ap", "Ap", "AP", "ndcg@10", "NDCG@10", "judged@5"):
+        registry.canonical_key(spelling)  # must not raise
+
+
+def test_family_selectors_merge_across_dialects():
+    parsed, level = registry.canonicalize(("P@5", "P_10", "P.15,20"))
+    assert parsed == (("P", (5.0, 10.0, 15.0, 20.0)),)
+    assert level == 1.0
+
+
+def test_whole_family_expands_to_default_grid():
+    assert registry.measure_keys(["P"]) == tuple(
+        f"P_{k}" for k in registry.DEFAULT_CUTOFFS)
+    assert registry.measure_keys(["success"]) == tuple(
+        f"success_{k}" for k in registry.SUCCESS_CUTOFFS)
+    assert registry.measure_keys(["iprec_at_recall"]) == tuple(
+        f"iprec_at_recall_{v:.2f}" for v in registry.IPREC_LEVELS)
+
+
+# -- rel= resolution ---------------------------------------------------------
+
+
+def test_rel_annotation_sets_level():
+    parsed, level = registry.canonicalize(["AP(rel=2)"])
+    assert parsed == (("map", ()),) and level == 2.0
+
+
+def test_rel_annotations_must_agree():
+    with pytest.raises(MeasureError, match="conflicting rel="):
+        registry.canonicalize(["AP(rel=2)", "P(rel=3)@5"])
+    # agreement is fine, and merges with un-annotated measures
+    parsed, level = registry.canonicalize(["AP(rel=2)", "P(rel=2)@5", "ndcg"])
+    assert level == 2.0 and len(parsed) == 3
+
+
+def test_rel_conflicts_with_explicit_level():
+    with pytest.raises(MeasureError, match="conflicts with relevance_level"):
+        registry.canonicalize(["AP(rel=2)"], relevance_level=3)
+    # ...but the weak default 1 does NOT conflict (serve's default -l 1)
+    assert registry.canonicalize(["AP(rel=2)"], relevance_level=1)[1] == 2.0
+
+
+def test_parse_measures_rejects_nondefault_rel():
+    with pytest.raises(MeasureError, match="relevance_level-aware"):
+        registry.parse_measures(["AP(rel=2)"])
+
+
+# -- errors ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    "bogus", "Bogus@5", "P_5.5", "P@0", "ndcg_cut_0", "RBP(p=1.5)",
+    "RBP(p=0.875)", "AP(frobnicate=1)", "AP(rel=x)", "RR@5",
+    "iprec_at_recall_1.50", "",
+])
+def test_malformed_measures_raise_measure_error(bad):
+    with pytest.raises(MeasureError):
+        registry.canonicalize([bad])
+
+
+def test_error_names_the_offending_measure():
+    with pytest.raises(MeasureError, match="Bogus@5"):
+        registry.canonicalize(["map", "Bogus@5"])
+
+
+def test_measure_error_is_a_value_error():
+    # the serve front-end maps ValueError → wire code "invalid"
+    assert issubclass(MeasureError, ValueError)
+
+
+def test_canonical_key_rejects_whole_parameterized_family():
+    with pytest.raises(MeasureError, match="whole family"):
+        registry.canonical_key("P")
+
+
+# -- rendering ---------------------------------------------------------------
+
+
+def test_render_ir_spellings():
+    assert registry.render_ir("map") == "AP"
+    assert registry.render_ir("gm_map") == "GMAP"
+    assert registry.render_ir("recip_rank") == "RR"
+    assert registry.render_ir("ndcg_cut_10") == "nDCG@10"
+    assert registry.render_ir("rbp_0.80") == "RBP(p=0.8)"
+    assert registry.render_ir("judged_10") == "Judged@10"
+    assert registry.render_ir("err_20") == "ERR@20"
+    assert registry.render_ir("iprec_at_recall_0.10") == "IPrec@0.10"
+
+
+def test_render_round_trip_every_default_key():
+    """trec key → ir spelling → same trec key, for the full default grid."""
+    for spec in registry.REGISTRY:
+        for key in registry.family_keys(spec.family, spec.default_params):
+            ir = registry.render_ir(key)
+            assert registry.render_trec(ir) == key, (key, ir)
+
+
+def test_both_dialects_error_helper():
+    assert "nDCG@10" in registry.both_dialects("ndcg_cut_10")
+    assert registry.both_dialects("garbage!") == "'garbage!'"
+
+
+# -- derived consumer tables -------------------------------------------------
+
+
+def test_cli_tables_are_registry_derived():
+    from repro import cli
+
+    assert cli.FAMILY_ORDER == registry.family_order()
+    assert cli.INT_MEASURES == frozenset({"num_q"}) | registry.integer_keys()
+    assert cli.SUM_MEASURES == registry.sum_families()
+    assert cli.AGGREGATE_ONLY == registry.aggregate_only_families()
+    # declaration order starts with the counters, like trec_eval
+    assert cli.FAMILY_ORDER[:3] == ("num_ret", "num_rel", "num_rel_ret")
+    assert set(("judged", "rbp", "err")) <= set(cli.FAMILY_ORDER)
+
+
+def test_supported_measures_matches_registry():
+    from repro.core import supported_measures
+
+    assert supported_measures == registry.supported_families()
+    assert len(registry.REGISTRY) == len(supported_measures)
+
+
+def test_missing_contributions():
+    assert registry.missing_contribution("num_rel") == "n_rel"
+    assert registry.missing_contribution("gm_map") == "log_gm_min"
+    assert registry.missing_contribution("map") == "zero"
+    assert registry.missing_contribution("ndcg_cut_10") == "zero"
+
+
+# -- depth bounds ------------------------------------------------------------
+
+
+def test_topk_depth_bounded_sets():
+    parsed, _ = registry.canonicalize(["P@5", "nDCG@100", "Judged@10"])
+    assert registry.topk_depth(parsed) == 100
+    parsed, _ = registry.canonicalize(["P@5", "num_ret", "num_rel"])
+    assert registry.topk_depth(parsed) == 5
+
+
+@pytest.mark.parametrize("full_m", ["map", "ndcg", "bpref", "recip_rank",
+                                    "Rprec", "rbp_0.80", "gm_map",
+                                    "iprec_at_recall", "num_rel_ret"])
+def test_topk_depth_none_for_full_depth_measures(full_m):
+    parsed, _ = registry.canonicalize([full_m, "P@5"])
+    assert registry.topk_depth(parsed) is None
+
+
+# -- documentation table / drift gate ----------------------------------------
+
+
+def test_markdown_table_lists_every_family():
+    table = registry.markdown_table()
+    for spec in registry.REGISTRY:
+        assert f"| `{spec.family}` |" in table
+
+
+def test_check_docs_accepts_current_measures_md():
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "docs", "MEASURES.md")
+    registry.check_docs(path)  # raises SystemExit on drift
+
+
+def test_check_docs_rejects_stale_table(tmp_path):
+    stale = tmp_path / "MEASURES.md"
+    stale.write_text("# measures\n\nnothing here\n")
+    with pytest.raises(SystemExit):
+        registry.check_docs(str(stale))
+
+
+def test_registry_cli_check_and_print(capsys):
+    assert registry.main(["--print"]) == 0
+    out = capsys.readouterr().out
+    assert out.strip() == registry.markdown_table()
+
+
+# -- property-based round trips (hypothesis, optional) -----------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _cutoff_fams = sorted(
+        s.family for s in registry.REGISTRY if s.param_kind == "cutoff")
+
+    @st.composite
+    def measure_strings(draw):
+        spec = registry.SPECS[draw(st.sampled_from(_cutoff_fams))]
+        k = draw(st.integers(1, 5000))
+        dialect = draw(st.booleans())
+        if dialect:
+            return f"{spec.ir_name}@{k}", f"{spec.family}_{k}"
+        return f"{spec.family}_{k}", f"{spec.family}_{k}"
+
+    @settings(max_examples=200, deadline=None)
+    @given(measure_strings())
+    def test_parse_render_parse_round_trip(case):
+        spelling, canonical = case
+        key = registry.render_trec(spelling)
+        assert key == canonical
+        # render to the OTHER dialect and parse again: same canonical key
+        assert registry.render_trec(registry.render_ir(key)) == key
+        # and canonicalization agrees with the direct spelling
+        assert registry.canonicalize([spelling]) == \
+            registry.canonicalize([key])
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 99), st.integers(1, 99))
+    def test_rbp_p_round_trip(a, b):
+        p = round(a / 100 + b / 10000, 2)  # any 2-decimal p in (0, 1)
+        if not 0.0 < p < 1.0:
+            return
+        key = registry.render_trec(f"RBP(p={p:g})")
+        assert key == f"rbp_{p:.2f}"
+        assert registry.render_trec(registry.render_ir(key)) == key

@@ -344,6 +344,55 @@ def test_relevance_level_rejects_non_numbers(service):
         assert "relevance_level" in resp["error"]
 
 
+# -- measure dialects over the wire -------------------------------------------
+
+
+def test_register_qrel_accepts_either_measure_dialect(service):
+    qrel = {"q1": {"d1": 1, "d2": 0}}
+    run = {"q1": {"d1": 2.0, "d2": 1.0}}
+    per_query = []
+    for rid, measures in (("trec", ["ndcg_cut_10", "map", "judged_5"]),
+                          ("ir", ["nDCG@10", "AP", "Judged@5"])):
+        reg = _roundtrip(service, {"op": "register_qrel", "qrel_id": rid,
+                                   "qrel": qrel, "measures": measures})
+        assert reg["ok"], reg
+        # canonical trec_eval keys come back whatever the request dialect
+        assert set(reg["result"]["measure_keys"]) == \
+            {"ndcg_cut_10", "map", "judged_5"}
+        resp = _roundtrip(service, {"op": "evaluate", "qrel_id": rid,
+                                    "run": run})
+        assert resp["ok"], resp
+        per_query.append(resp["result"]["per_query"])
+    assert per_query[0] == per_query[1]  # bit-identical through the wire
+
+
+def test_unknown_measure_is_invalid_and_names_it(service):
+    for bad in ("Bogus@5", "bogus", "RBP(p=1.5)", "P@0"):
+        resp = _roundtrip(service, {"op": "register_qrel", "qrel_id": "x",
+                                    "qrel": {"q1": {"d1": 1}},
+                                    "measures": [bad]})
+        assert not resp["ok"] and resp["code"] == "invalid", bad
+        assert bad in resp["error"], resp["error"]
+    # the connection survives: the original collection still answers
+    resp = _roundtrip(service, {"op": "evaluate", "qrel_id": "web",
+                                "run": {"q1": {"d1": 1.0}}})
+    assert resp["ok"]
+
+
+def test_judged_docs_only_over_the_wire(service):
+    qrel = {"q1": {"d1": 1, "d2": 0}}
+    run = {"q1": {"dx": 3.0, "d1": 2.0, "d2": 1.0}}  # dx is unjudged
+    reg = _roundtrip(service, {"op": "register_qrel", "qrel_id": "j",
+                               "qrel": qrel, "measures": ["map", "num_ret"],
+                               "judged_docs_only": True})
+    assert reg["ok"] and reg["result"]["judged_docs_only"] is True
+    resp = _roundtrip(service, {"op": "evaluate", "qrel_id": "j",
+                                "run": run})
+    q1 = resp["result"]["per_query"]["q1"]
+    assert q1["num_ret"] == 2.0  # dx dropped before scoring
+    assert q1["map"] == 1.0      # d1 ranks first among the judged docs
+
+
 # -- TCP integration: oversized frames, rate limiting, drain ------------------
 
 
