@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import asyncio
 import os
+import threading
 import time
 from typing import Dict, List
 
@@ -156,4 +157,45 @@ def run(full: bool = False) -> List[Dict]:
         print(f"  speedup vs single-process: "
               f"{row['speedup_vs_single']:.2f}x "
               f"({row['host_cpus']} host cpu(s))")
+
+    # replication (R=2 over 2 workers): what fan-out registration and
+    # p2c reads cost when healthy, and — the headline robustness number —
+    # the client-observed p50/p99 when one replica is SIGKILLed mid-run
+    # and every request fails over to its sibling
+    healthy_wall = 1.0
+    for mode in ("replicated", "replicated-kill"):
+        with ClusterThread(2, worker_args=worker_args
+                           + ["--max-collections", str(n_collections)],
+                           router_kw=dict(replication=2, retries=4,
+                                          health_interval=5.0)) as cluster:
+            _register(cluster.host, cluster.port, workload)
+            timer = None
+            if mode == "replicated-kill":
+                victim = cluster.replicas_of(next(iter(workload)))[0]
+
+                def _kill(name=victim, c=cluster):
+                    try:
+                        c.kill_worker(name)
+                    except Exception:
+                        pass  # the run already finished: nothing to kill
+
+                timer = threading.Timer(max(0.2, 0.4 * healthy_wall),
+                                        _kill)
+                timer.start()
+            try:
+                latencies, wall = asyncio.run(_drive(
+                    cluster.host, cluster.port, workload, requests))
+            finally:
+                if timer is not None:
+                    timer.cancel()
+            stats = cluster.stats()
+        if mode == "replicated":
+            healthy_wall = wall
+        row = _row(mode, 2, latencies, wall)
+        row["replication"] = 2
+        row["speedup_vs_single"] = row["runs_per_s"] / baseline
+        if mode == "replicated-kill":
+            row["failovers"] = stats["router"]["failovers"]
+            row["worker_retries"] = stats["router"]["worker_retries"]
+        rows.append(row)
     return rows

@@ -34,8 +34,9 @@ qrel/run payloads are first-class, not a crash).
 
 from repro.client.aio import AsyncEvalClient, EvalResult, IDEMPOTENT_OPS
 from repro.client.errors import (AuthError, ClientError,
-                                 ConnectionLostError, ProtocolError,
-                                 ServerError, WorkerUnavailableError)
+                                 ConnectionLostError, DeadlineExceededError,
+                                 ProtocolError, ServerError,
+                                 WorkerUnavailableError)
 from repro.client.sync import EvalClient
 
 __all__ = [
@@ -47,6 +48,7 @@ __all__ = [
     "ServerError",
     "AuthError",
     "ConnectionLostError",
+    "DeadlineExceededError",
     "ProtocolError",
     "WorkerUnavailableError",
 ]

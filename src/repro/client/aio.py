@@ -48,7 +48,8 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.client.errors import (ClientError, ConnectionLostError,
-                                 ProtocolError, error_from_response)
+                                 DeadlineExceededError, ProtocolError,
+                                 error_from_response)
 from repro.serve.wire import DEFAULT_FRAME_LIMIT
 
 #: ops safe to re-send after a connection loss: they either replace state
@@ -218,6 +219,13 @@ class AsyncEvalClient:
                 line = await reader.readline()
                 if not line:
                     break
+                if not line.endswith(b"\n"):
+                    # a line missing its terminator at EOF is a TORN tail
+                    # (the peer died / the stream was cut mid-response) —
+                    # never hand it to a waiter as if it were a response
+                    exc = ConnectionLostError(
+                        "connection cut mid-response (torn frame)")
+                    break
                 m = _ID_PREFIX.match(line)
                 if m is not None:
                     ent = pending.pop(int(m.group(1)), None)
@@ -308,11 +316,27 @@ class AsyncEvalClient:
             return resp.get("result")
         raise error_from_response(resp)
 
-    async def _request(self, op: str, **fields):
-        """Send ``op``; retry idempotent ops across reconnects."""
+    async def _request(self, op: str, _timeout: Optional[float] = None,
+                       **fields):
+        """Send ``op``; retry idempotent ops across reconnects.
+
+        ``_timeout`` (seconds) is the per-call deadline: it is sent to the
+        server as ``deadline_ms`` (routers/workers enforce it and answer
+        ``deadline_exceeded``, mapped to :class:`DeadlineExceededError`)
+        AND enforced locally with a small grace period as a backstop for a
+        server too hung to even say so.
+        """
+        if _timeout is not None:
+            if not _timeout > 0:
+                raise ValueError(f"timeout must be > 0 s, got {_timeout}")
+            fields["deadline_ms"] = float(_timeout) * 1e3
         payload = _jsonable({k: v for k, v in fields.items()
                              if v is not None})
         retryable = op in IDEMPOTENT_OPS and self._host is not None
+        # local backstop: give the server the full budget plus slack to
+        # answer deadline_exceeded itself (its error names the culprit)
+        backstop = None if _timeout is None else \
+            asyncio.get_running_loop().time() + _timeout + 1.0
         attempt = 0
         while True:
             try:
@@ -320,7 +344,20 @@ class AsyncEvalClient:
                 # reconnect consumes a retry and backs off like any other
                 # transport failure (AuthError et al. are not caught here)
                 await self._ensure_connected()
-                resp = await self._send_and_wait(op, payload)
+                if backstop is None:
+                    resp = await self._send_and_wait(op, payload)
+                else:
+                    remaining = backstop \
+                        - asyncio.get_running_loop().time()
+                    if remaining <= 0:
+                        raise asyncio.TimeoutError()
+                    resp = await asyncio.wait_for(
+                        self._send_and_wait(op, payload), remaining)
+            except asyncio.TimeoutError:
+                raise DeadlineExceededError(
+                    f"op {op!r} got no answer within its {_timeout}s "
+                    "timeout (local backstop); the server may still be "
+                    "working on it", code="deadline_exceeded") from None
             except (ConnectionError, OSError) as exc:
                 # covers ConnectionLostError from the reader loop and
                 # raw socket errors from connect/write/drain
@@ -396,32 +433,40 @@ class AsyncEvalClient:
 
     async def register_qrel(self, qrel_id: str, qrel, measures=None,
                             relevance_level=None, backend=None,
-                            judged_docs_only=None) -> dict:
+                            judged_docs_only=None,
+                            timeout: Optional[float] = None) -> dict:
         """Intern a qrel server-side; returns the collection info dict.
 
         ``measures`` accepts either dialect (``"map"`` / ``"nDCG@10"``);
-        ``judged_docs_only`` mirrors trec_eval's ``-J``.
+        ``judged_docs_only`` mirrors trec_eval's ``-J``.  ``timeout``
+        (seconds) becomes the request's ``deadline_ms``; past it the call
+        raises :class:`DeadlineExceededError`.
         """
         return await self._request(
-            "register_qrel", qrel_id=qrel_id, qrel=qrel, measures=measures,
-            relevance_level=relevance_level, backend=backend,
-            judged_docs_only=judged_docs_only)
+            "register_qrel", _timeout=timeout, qrel_id=qrel_id, qrel=qrel,
+            measures=measures, relevance_level=relevance_level,
+            backend=backend, judged_docs_only=judged_docs_only)
 
     async def register_run(self, qrel_id: str, run_id: str, run=None,
-                           tokens=None) -> dict:
+                           tokens=None,
+                           timeout: Optional[float] = None) -> dict:
         """Pin a tokenized run server-side for ``run_ref`` rescoring."""
-        return await self._request("register_run", qrel_id=qrel_id,
-                                   run_id=run_id, run=run, tokens=tokens)
+        return await self._request("register_run", _timeout=timeout,
+                                   qrel_id=qrel_id, run_id=run_id, run=run,
+                                   tokens=tokens)
 
     async def evaluate(self, qrel_id: str, run=None, tokens=None,
-                       run_ref: Optional[str] = None,
-                       scores=None) -> EvalResult:
+                       run_ref: Optional[str] = None, scores=None,
+                       timeout: Optional[float] = None) -> EvalResult:
         """Evaluate one run (``run=`` | ``tokens=`` | ``run_ref=+scores=``).
 
         Concurrent calls pipeline on the connection and coalesce
-        server-side into fewer backend calls.
+        server-side into fewer backend calls.  ``timeout`` (seconds) maps
+        to the wire's ``deadline_ms``: the server answers (or this client
+        raises) :class:`DeadlineExceededError` once the budget is gone.
         """
-        result = await self._request("evaluate", qrel_id=qrel_id, run=run,
+        result = await self._request("evaluate", _timeout=timeout,
+                                     qrel_id=qrel_id, run=run,
                                      tokens=tokens, run_ref=run_ref,
                                      scores=scores)
         return EvalResult(result["per_query"], result["aggregates"])
@@ -449,7 +494,8 @@ class AsyncEvalClient:
                       n_permutations: Optional[int] = None,
                       seed: Optional[int] = None,
                       alpha: Optional[float] = None,
-                      run_names: Optional[Sequence[str]] = None) -> dict:
+                      run_names: Optional[Sequence[str]] = None,
+                      timeout: Optional[float] = None) -> dict:
         """Paired significance tests across K >= 2 runs on one measure.
 
         Exactly one of ``runs`` (``{name: run}`` mapping or sequence of dict
@@ -461,14 +507,17 @@ class AsyncEvalClient:
         ``alpha``.  Omitted keyword arguments use the server defaults.
         """
         return await self._request(
-            "compare", qrel_id=qrel_id, runs=runs, run_refs=run_refs,
+            "compare", _timeout=timeout, qrel_id=qrel_id, runs=runs,
+            run_refs=run_refs,
             measure=measure, tests=list(tests) if tests is not None else None,
             n_permutations=n_permutations, seed=seed, alpha=alpha,
             run_names=run_names)
 
-    async def drop_qrel(self, qrel_id: str) -> bool:
+    async def drop_qrel(self, qrel_id: str,
+                        timeout: Optional[float] = None) -> bool:
         """Release a collection; NOT retried on connection loss."""
-        result = await self._request("drop_qrel", qrel_id=qrel_id)
+        result = await self._request("drop_qrel", _timeout=timeout,
+                                     qrel_id=qrel_id)
         return bool(result["dropped"])
 
     # -- lifecycle -----------------------------------------------------------

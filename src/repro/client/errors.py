@@ -59,6 +59,17 @@ class WorkerUnavailableError(ServerError):
     """
 
 
+class DeadlineExceededError(ServerError):
+    """The request's ``deadline_ms`` budget ran out before it completed.
+
+    Raised either because the server (router or worker) answered with the
+    ``deadline_exceeded`` code, or locally when a per-call ``timeout=``
+    elapsed with no answer at all (hung server).  Either way the work may
+    still complete server-side — a deadline bounds the *wait*, not the
+    execution — so only idempotent requests are safe to re-send.
+    """
+
+
 class ConnectionLostError(ClientError, ConnectionError):
     """The connection dropped before this request's response arrived."""
 
@@ -79,6 +90,8 @@ def error_from_response(resp: dict) -> ServerError:
         cls = AuthError
     elif code == "worker_unavailable":
         cls = WorkerUnavailableError
+    elif code == "deadline_exceeded":
+        cls = DeadlineExceededError
     else:
         cls = ServerError
     return cls(message, code=code, request_id=resp.get("id"))

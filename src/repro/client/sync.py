@@ -95,21 +95,28 @@ class EvalClient:
 
     def register_qrel(self, qrel_id: str, qrel, measures=None,
                       relevance_level=None, backend=None,
-                      judged_docs_only=None) -> dict:
+                      judged_docs_only=None,
+                      timeout: Optional[float] = None) -> dict:
         return self._call(self._async.register_qrel(
             qrel_id, qrel, measures=measures,
             relevance_level=relevance_level, backend=backend,
-            judged_docs_only=judged_docs_only))
+            judged_docs_only=judged_docs_only, timeout=timeout))
 
     def register_run(self, qrel_id: str, run_id: str, run=None,
-                     tokens=None) -> dict:
+                     tokens=None, timeout: Optional[float] = None) -> dict:
         return self._call(self._async.register_run(qrel_id, run_id, run=run,
-                                                   tokens=tokens))
+                                                   tokens=tokens,
+                                                   timeout=timeout))
 
     def evaluate(self, qrel_id: str, run=None, tokens=None,
-                 run_ref: Optional[str] = None, scores=None) -> EvalResult:
+                 run_ref: Optional[str] = None, scores=None,
+                 timeout: Optional[float] = None) -> EvalResult:
+        """Evaluate one run.  ``timeout`` (seconds) maps to the request's
+        ``deadline_ms``; past it the call raises
+        :class:`repro.client.DeadlineExceededError`."""
         return self._call(self._async.evaluate(
-            qrel_id, run=run, tokens=tokens, run_ref=run_ref, scores=scores))
+            qrel_id, run=run, tokens=tokens, run_ref=run_ref, scores=scores,
+            timeout=timeout))
 
     def evaluate_many(self, qrel_id: str, runs=None, *,
                       run_ref: Optional[str] = None,
@@ -132,15 +139,17 @@ class EvalClient:
                 measure: str = "map", *, tests=None,
                 n_permutations: Optional[int] = None,
                 seed: Optional[int] = None, alpha: Optional[float] = None,
-                run_names: Optional[Sequence[str]] = None) -> dict:
+                run_names: Optional[Sequence[str]] = None,
+                timeout: Optional[float] = None) -> dict:
         """Paired significance tests across K runs (see the async client)."""
         return self._call(self._async.compare(
             qrel_id, runs=runs, run_refs=run_refs, measure=measure,
             tests=tests, n_permutations=n_permutations, seed=seed,
-            alpha=alpha, run_names=run_names))
+            alpha=alpha, run_names=run_names, timeout=timeout))
 
-    def drop_qrel(self, qrel_id: str) -> bool:
-        return self._call(self._async.drop_qrel(qrel_id))
+    def drop_qrel(self, qrel_id: str,
+                  timeout: Optional[float] = None) -> bool:
+        return self._call(self._async.drop_qrel(qrel_id, timeout=timeout))
 
     @property
     def transport_stats(self) -> dict:

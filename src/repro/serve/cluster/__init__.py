@@ -11,24 +11,54 @@ out/in over :class:`repro.client.AsyncEvalClient` connections — each
 collection interned by exactly one worker, each worker's micro-batcher
 still coalescing the traffic aimed at it.
 
-Workers are restarted with backoff on crash or failed health probe, and
-the router replays its registration journal onto the fresh process, so
-idempotent requests (``evaluate``, ``compare``, ``register_*``) retry
-transparently across a worker death; non-idempotent ``drop_qrel`` answers
-a machine-readable ``worker_unavailable`` error instead.  See
-``docs/SERVING.md`` (cluster section) for topology, failure semantics,
-and the ``python -m repro.serve.cluster`` flags; tests in
-``tests/test_cluster.py`` pin bit-identity against single-process serving
-and exercise the fault paths deterministically.
+With ``replication >= 2`` each collection is owned by a *replica set*
+(ring successor walk): registrations fan out to every live replica before
+acking, reads balance across replicas with power-of-two-choices filtered
+through per-worker circuit breakers
+(:class:`~repro.serve.cluster.breaker.CircuitBreaker`), and a replica
+dying mid-request fails over to its sibling instantly.  Workers are
+restarted with backoff on crash or failed health probe, and the router
+replays its registration journal
+(:class:`~repro.serve.cluster.journal.RegistrationJournal` — durable on
+disk with ``--state-dir``) onto the fresh process, so idempotent requests
+(``evaluate``, ``compare``, ``register_*``) retry transparently across a
+worker death; non-idempotent ``drop_qrel`` answers a machine-readable
+``worker_unavailable`` error only when EVERY replica is unreachable.
+Requests may carry ``deadline_ms`` — enforced end-to-end at the router
+(``deadline_exceeded``), with hedged second requests for idempotent ops
+near the deadline.
+
+The chaos harness (:mod:`repro.serve.cluster.chaos`) replays seeded
+declarative fault schedules — kill, SIGSTOP-hang, response delay, byte
+truncation — against a live cluster; ``tests/test_chaos.py`` asserts
+results stay bit-identical to in-process evaluation and no acknowledged
+registration is ever lost.  See ``docs/SERVING.md`` (cluster section) for
+topology, the failure-semantics matrix, and the ``python -m
+repro.serve.cluster`` flags; tests in ``tests/test_cluster.py`` pin
+bit-identity against single-process serving and exercise the fault paths
+deterministically.
 """
 
+from repro.serve.cluster.breaker import CircuitBreaker
+from repro.serve.cluster.chaos import (ChaosEvent, ChaosInjector,
+                                       ChaosSchedule, FaultProxy,
+                                       ProxyManager, inject)
+from repro.serve.cluster.journal import RegistrationJournal
 from repro.serve.cluster.ring import HashRing
 from repro.serve.cluster.router import Router
 from repro.serve.cluster.worker import WorkerProcess, WorkerStartupError
 
 __all__ = [
+    "ChaosEvent",
+    "ChaosInjector",
+    "ChaosSchedule",
+    "CircuitBreaker",
+    "FaultProxy",
     "HashRing",
+    "ProxyManager",
+    "RegistrationJournal",
     "Router",
     "WorkerProcess",
     "WorkerStartupError",
+    "inject",
 ]

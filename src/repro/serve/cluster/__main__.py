@@ -11,6 +11,14 @@ Router-level knobs (``--auth-token``, ``--rate-limit``, ``--burst``,
 (``--backend``, ``--window-ms``, ``--max-batch``, ``--max-collections``,
 ``--max-pending``) pass through to every worker's command line.
 
+Robustness knobs: ``--replication R`` gives every collection a replica
+set of R workers (fan-out registrations, balanced reads, instant
+failover); ``--state-dir DIR`` makes the registration journal durable so
+a full cluster restart against the same DIR recovers every acknowledged
+collection; ``--breaker-failures`` / ``--breaker-cooldown`` tune the
+per-worker circuit breaker and ``--hedge-fraction`` when deadline-carrying
+requests hedge to a sibling.
+
 SIGINT/SIGTERM drain gracefully: stop accepting, answer in-flight
 requests, then SIGTERM each worker so it runs its own drain.
 """
@@ -38,9 +46,13 @@ def build_router(args, *, frame_limit: int) -> Router:
         "--max-pending", str(args.max_pending),
     ]
     return Router(args.workers, worker_args=worker_args,
-                  replicas=args.replicas, retries=args.retries,
+                  replicas=args.replicas, replication=args.replication,
+                  retries=args.retries,
                   health_interval=args.health_interval,
-                  frame_limit=frame_limit)
+                  frame_limit=frame_limit, state_dir=args.state_dir,
+                  breaker_failures=args.breaker_failures,
+                  breaker_cooldown=args.breaker_cooldown,
+                  hedge_fraction=args.hedge_fraction)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -56,12 +68,30 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="router listen port (default 0 = ephemeral)")
     ap.add_argument("--replicas", type=int, default=64, metavar="N",
                     help="virtual nodes per worker on the hash ring")
+    ap.add_argument("--replication", type=int, default=1, metavar="R",
+                    help="replica set size per collection: registrations "
+                         "fan out to R workers, reads balance across "
+                         "them and fail over instantly (default 1)")
+    ap.add_argument("--state-dir", default=None, metavar="DIR",
+                    help="durable registration journal directory; a "
+                         "restarted cluster pointed at the same DIR "
+                         "recovers every acknowledged collection")
     ap.add_argument("--retries", type=int, default=3, metavar="N",
                     help="transparent retries of idempotent ops across "
                          "worker restarts")
     ap.add_argument("--health-interval", type=float, default=1.0,
                     metavar="S", help="seconds between worker health "
                     "probes (default 1)")
+    ap.add_argument("--breaker-failures", type=int, default=3, metavar="N",
+                    help="consecutive transport failures that open a "
+                         "worker's circuit breaker (default 3)")
+    ap.add_argument("--breaker-cooldown", type=float, default=1.0,
+                    metavar="S", help="seconds an open breaker waits "
+                    "before its half-open probe (default 1)")
+    ap.add_argument("--hedge-fraction", type=float, default=0.5,
+                    metavar="F", help="share of a request's deadline_ms "
+                    "budget that elapses before an idempotent request is "
+                    "hedged to a sibling replica (default 0.5)")
     # router-level hardening (same semantics as python -m repro.serve)
     ap.add_argument("--max-frame-mb", type=float,
                     default=DEFAULT_FRAME_LIMIT / 2**20, metavar="MB",

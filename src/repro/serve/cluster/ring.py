@@ -29,6 +29,20 @@ True
 >>> ring.remove("w3")                    # shrink: movers return home
 >>> all(ring.owner(k) == before[k] for k in before)
 True
+
+Replication reads the same ring: a key's **replica set** is the first R
+*distinct* nodes met walking clockwise from its hash
+(:meth:`HashRing.owners`), so ``owners(k, 1)[0] == owner(k)`` always, the
+sets are deterministic across processes, and a membership change disturbs
+each replica set by at most the one node that joined or left it.
+
+>>> sets = {k: ring.owners(k, 2) for k in map(str, range(100))}
+>>> all(len(set(s)) == 2 for s in sets.values())       # R distinct workers
+True
+>>> ring.add("w3")
+>>> changed = [k for k, s in sets.items() if ring.owners(k, 2) != s]
+>>> all(set(ring.owners(k, 2)) - set(sets[k]) <= {"w3"} for k in changed)
+True
 """
 
 from __future__ import annotations
@@ -92,6 +106,29 @@ class HashRing:
         if i == len(self._points):
             i = 0  # wrap past the top of the ring
         return self._ring[i][1]
+
+    def owners(self, key: str, n: int = 1) -> List[str]:
+        """The replica set for ``key``: the first ``n`` DISTINCT nodes met
+        walking clockwise from its hash (capped at the pool size).
+
+        ``owners(key, 1) == [owner(key)]`` by construction, and appending a
+        node to the walk order is how replication degrades gracefully: with
+        fewer nodes than ``n`` every node is a replica.
+        """
+        if n < 1:
+            raise ValueError(f"need n >= 1 replicas, got {n}")
+        if not self._ring:
+            raise KeyError("ring is empty: no workers")
+        n = min(n, len(self._nodes))
+        start = bisect.bisect_left(self._points, _hash(key))
+        out: List[str] = []
+        for step in range(len(self._ring)):
+            node = self._ring[(start + step) % len(self._ring)][1]
+            if node not in out:
+                out.append(node)
+                if len(out) == n:
+                    break
+        return out
 
     def copy(self) -> "HashRing":
         """An independent ring with the same membership (for what-if

@@ -84,6 +84,10 @@ class ClusterThread:
         """Which worker owns ``qrel_id`` (for aiming fault injection)."""
         return self.router.owner_of(qrel_id)
 
+    def replicas_of(self, qrel_id: str) -> Tuple[str, ...]:
+        """The full replica set of ``qrel_id``, primary first."""
+        return tuple(self.router.replicas_of(qrel_id))
+
     def kill_worker(self, name: str) -> int:
         """SIGKILL a worker process (fault injection); returns its pid."""
         async def _do():
@@ -92,6 +96,18 @@ class ClusterThread:
             proc.kill()
             return pid
         return self.call(_do())
+
+    def pause_worker(self, name: str) -> None:
+        """SIGSTOP a worker (hung-but-alive fault injection)."""
+        async def _do():
+            self.router._slots[name].proc.pause()
+        self.call(_do())
+
+    def resume_worker(self, name: str) -> None:
+        """SIGCONT a paused worker."""
+        async def _do():
+            self.router._slots[name].proc.resume()
+        self.call(_do())
 
     def add_worker(self, name: Optional[str] = None) -> str:
         return self.call(self.router.add_worker(name), timeout=120)

@@ -48,17 +48,23 @@ class WorkerProcess:
     ``frame_limit`` is the *router's* frame limit; the worker's server and
     this side's client both get a little headroom on top of it, because
     forwarded frames carry a spliced-on internal request id.
+
+    ``wrap_endpoint`` is an async hook ``(name, host, port) -> (host,
+    port)`` called once per generation, after the banner is parsed and
+    before the client connects — the chaos harness uses it to interpose a
+    fault-injecting TCP proxy between router and worker.
     """
 
     def __init__(self, name: str, *, extra_args: Sequence[str] = (),
                  python: str = sys.executable,
                  frame_limit: int = DEFAULT_FRAME_LIMIT,
-                 env: Optional[dict] = None):
+                 env: Optional[dict] = None, wrap_endpoint=None):
         self.name = name
         self._extra = [str(a) for a in extra_args]
         self._python = python
         self._frame_limit = int(frame_limit) + 4096  # id-splice headroom
         self._env = env
+        self._wrap_endpoint = wrap_endpoint
         self.proc: Optional[asyncio.subprocess.Process] = None
         self.client: Optional[AsyncEvalClient] = None
         self.host: Optional[str] = None
@@ -100,6 +106,9 @@ class WorkerProcess:
         try:
             self.host, self.port = await asyncio.wait_for(
                 self._await_banner(), ready_timeout)
+            if self._wrap_endpoint is not None:
+                self.host, self.port = await self._wrap_endpoint(
+                    self.name, self.host, self.port)
             # keep stderr flowing so the pipe never fills and the last
             # lines are available when the process dies
             self._stderr_task = asyncio.get_running_loop().create_task(
@@ -161,6 +170,19 @@ class WorkerProcess:
         if self.alive:
             with contextlib.suppress(ProcessLookupError):
                 self.proc.kill()
+
+    def pause(self) -> None:
+        """SIGSTOP the current generation: alive but hung (fault
+        injection — the router's health probe is what must notice)."""
+        if self.alive:
+            with contextlib.suppress(ProcessLookupError):
+                self.proc.send_signal(signal.SIGSTOP)
+
+    def resume(self) -> None:
+        """SIGCONT a paused generation."""
+        if self.alive:
+            with contextlib.suppress(ProcessLookupError):
+                self.proc.send_signal(signal.SIGCONT)
 
     async def stop(self, *, timeout: float = 15.0) -> None:
         """Graceful shutdown: close the client, SIGTERM, bounded wait.

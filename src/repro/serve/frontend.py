@@ -120,11 +120,50 @@ def _relevance_level(req: dict):
     return level
 
 
+def _deadline_seconds(req: dict) -> Optional[float]:
+    """Validate the optional ``deadline_ms`` field → seconds (or None)."""
+    ms = req.get("deadline_ms")
+    if ms is None:
+        return None
+    if isinstance(ms, bool) or not isinstance(ms, (int, float)) or ms <= 0:
+        raise ProtocolError(
+            "field 'deadline_ms' must be a positive number of "
+            f"milliseconds, got {ms!r}", code="invalid")
+    return float(ms) / 1e3
+
+
 async def handle_request(service: EvaluationService, req: dict) -> dict:
-    """Execute one decoded protocol request; never raises."""
+    """Execute one decoded protocol request; never raises.
+
+    A request may carry ``deadline_ms``: the budget the *caller* is still
+    willing to wait.  Past it the op is cancelled and answered with a
+    ``deadline_exceeded`` error — each attempt gets the full budget from
+    its arrival here (end-to-end enforcement, including queueing and
+    retries, is the cluster router's job).
+    """
     rid = req.get("id")
     try:
         op = _check_request(req)
+        budget = _deadline_seconds(req)
+        if budget is None:
+            return await _dispatch_request(service, op, req)
+        try:
+            return await asyncio.wait_for(
+                _dispatch_request(service, op, req), budget)
+        except asyncio.TimeoutError:
+            return _error(
+                rid, f"op {op!r} missed its 'deadline_ms' budget "
+                f"({req['deadline_ms']} ms) on the server",
+                "deadline_exceeded")
+    except ProtocolError as exc:
+        return _error(rid, str(exc), exc.code)
+
+
+async def _dispatch_request(service: EvaluationService, op: str,
+                            req: dict) -> dict:
+    """The per-op dispatch behind :func:`handle_request`; never raises."""
+    rid = req.get("id")
+    try:
         if op == "register_qrel":
             result = service.register_qrel(
                 req["qrel_id"], req["qrel"], measures=req.get("measures"),
@@ -168,6 +207,8 @@ async def handle_request(service: EvaluationService, req: dict) -> dict:
             result = {"authenticated": True}
         else:  # op == "ping"
             result = "pong"
+    except asyncio.CancelledError:
+        raise  # deadline (or shutdown) cancellation must propagate
     except ProtocolError as exc:
         return _error(rid, str(exc), exc.code)
     except KeyError as exc:  # unknown qrel_id / run_ref from the service

@@ -56,6 +56,7 @@ ERROR_CODES = (
     "bad_auth",         # auth attempted with the wrong token
     "frame_too_large",  # request line exceeded the frame limit
     "worker_unavailable",  # cluster router: owning worker down, not retried
+    "deadline_exceeded",  # the request's deadline_ms budget ran out first
     "internal",         # anything else — a server-side bug, not the client
 )
 
@@ -124,6 +125,34 @@ async def iter_frames(reader: asyncio.StreamReader,
             if buf and not discarding:
                 yield bytes(buf)  # trailing frame without a newline (pipes)
             return
+
+
+def split_frames(data: bytes, limit: int = DEFAULT_FRAME_LIMIT):
+    """Synchronous sibling of :func:`iter_frames` for durable on-disk logs.
+
+    Yields each complete (newline-terminated) frame as ``bytes``; a frame
+    over ``limit`` degrades to one :class:`OversizedFrame` marker exactly
+    like the streaming scanner.  Unlike :func:`iter_frames` — whose EOF is
+    a *clean* end of a pipe — trailing bytes without a newline mean the
+    writer crashed mid-append, so the torn tail is silently dropped and
+    replay stops at the last durable record.
+
+    >>> [bytes(f) for f in split_frames(b'{"a":1}\\n{"b":2}\\n{"torn')]
+    [b'{"a":1}', b'{"b":2}']
+    >>> [f for f in split_frames(b'xxxxx\\nok\\n', limit=3)]
+    [OversizedFrame(size=5, limit=3), b'ok']
+    """
+    start = 0
+    while True:
+        nl = data.find(b"\n", start)
+        if nl < 0:
+            return  # torn tail (or clean EOF right after a newline)
+        frame = data[start:nl]
+        if len(frame) > limit:
+            yield OversizedFrame(len(frame), limit)
+        else:
+            yield frame
+        start = nl + 1
 
 
 class TokenBucket:

@@ -1,0 +1,227 @@
+"""Chaos-schedule acceptance tests (ISSUE 10): the cluster under fire.
+
+Seeded :class:`~repro.serve.cluster.chaos.ChaosSchedule`\\ s — kill,
+SIGSTOP-hang, response delay, byte truncation, alone and in random
+combination — replay against a live replicated cluster while traffic
+flows.  Two invariants must hold for EVERY schedule:
+
+* **no garbage, ever**: a response that is delivered is bit-identical to
+  the in-process :class:`~repro.core.RelevanceEvaluator`; a request that
+  fails fails with a *typed* protocol error
+  (:class:`~repro.client.WorkerUnavailableError` /
+  :class:`~repro.client.DeadlineExceededError`), never a torn frame or a
+  stack trace;
+* **no lost acknowledgements**: every registration the router acked —
+  including ones acked mid-chaos — evaluates bit-identically once the
+  schedule has played out and the cluster has healed.
+
+The cluster is module-scoped (workers cost ~1 s to boot); the wire runs
+through :class:`~repro.serve.cluster.chaos.ProxyManager` fault proxies so
+delay/truncate events have somewhere to strike.  Health probes are tuned
+tight (0.5 s interval, 1 s timeout) so hung workers are SIGKILLed onto
+the restart path instead of wedging the pool.
+"""
+
+import time
+
+import pytest
+
+from repro.client import (DeadlineExceededError, EvalClient,
+                          WorkerUnavailableError)
+from repro.core import RelevanceEvaluator
+from repro.data.synthetic_ir import synthesize_run
+from repro.serve.cluster import ChaosEvent, ChaosSchedule, ProxyManager
+from repro.serve.cluster.chaos import inject
+from repro.serve.cluster.testing import ClusterThread
+
+MEASURES = ("map", "ndcg", "recip_rank", "P")
+
+#: errors a client may legitimately see WHILE a schedule is running
+TOLERATED = (WorkerUnavailableError, DeadlineExceededError)
+
+
+@pytest.fixture(scope="module")
+def chaos_cluster(tmp_path_factory):
+    state = str(tmp_path_factory.mktemp("chaos-state"))
+    proxies = ProxyManager()
+    cluster = ClusterThread(
+        2, worker_args=["--backend", "single", "--window-ms", "1",
+                        "--max-collections", "64"],
+        router_kw=dict(replication=2, retries=4, rng_seed=11,
+                       health_interval=0.5, health_timeout=1.0,
+                       state_dir=state, wrap_endpoint=proxies.wrap))
+    try:
+        yield cluster, proxies
+    finally:
+        try:
+            cluster.call(proxies.aclose(), timeout=30)
+        finally:
+            cluster.close()
+
+
+def _wait_all_ready(cluster, timeout=90.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cluster.health()["status"] == "ok":
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"cluster not ready: {cluster.health()}")
+
+
+def _register(client, prefix, n, seed0):
+    """Register n collections; return {qrel_id: (run, want)}."""
+    registered = {}
+    for i in range(n):
+        run, qrel = synthesize_run(n_queries=6, n_docs=5, seed=seed0 + i)
+        qrel_id = f"{prefix}-{i}"
+        client.register_qrel(qrel_id, qrel, MEASURES)
+        registered[qrel_id] = (
+            run, RelevanceEvaluator(qrel, MEASURES).evaluate(run))
+    return registered
+
+
+def _drive(client, registered, fut, *, deadline=None, register_seed=None):
+    """Round-robin evaluates (and optional mid-chaos registrations) until
+    the schedule future resolves.  Delivered results must be
+    bit-identical; failures must be typed.  Returns {code: count}."""
+    errors = {}
+    i = 0
+    while not fut.done():
+        for qrel_id, (run, want) in list(registered.items()):
+            try:
+                res = client.evaluate(qrel_id, run=run, timeout=deadline)
+            except TOLERATED as exc:
+                errors[exc.code] = errors.get(exc.code, 0) + 1
+            else:
+                assert res.per_query == want, qrel_id
+        if register_seed is not None and i < 8:  # bounded: LRU headroom
+            run, qrel = synthesize_run(n_queries=5, n_docs=4,
+                                       seed=register_seed + i)
+            qrel_id = f"mid-{register_seed}-{i}"
+            try:
+                client.register_qrel(qrel_id, qrel, MEASURES)
+            except TOLERATED:
+                pass  # NOT acked: the router owes us nothing for it
+            else:  # acked: it must survive whatever the schedule does
+                registered[qrel_id] = (
+                    run, RelevanceEvaluator(qrel, MEASURES).evaluate(run))
+            i += 1
+        time.sleep(0.02)
+    fut.result(timeout=60)  # surface injector exceptions
+
+
+def _assert_converged(cluster, client, registered):
+    """Post-schedule: zero lost acks, every answer bit-identical."""
+    _wait_all_ready(cluster)
+    for qrel_id, (run, want) in registered.items():
+        res = client.evaluate(qrel_id, run=run)
+        assert res.per_query == want, f"{qrel_id} diverged after chaos"
+        assert qrel_id in cluster.router._journal  # ack is still durable
+
+
+def test_chaos_kills_lose_nothing(chaos_cluster):
+    """SIGKILL each worker in turn under live traffic + registrations."""
+    cluster, proxies = chaos_cluster
+    _wait_all_ready(cluster)
+    schedule = ChaosSchedule([
+        ChaosEvent(t=0.10, kind="kill", worker="w0"),
+        ChaosEvent(t=1.20, kind="kill", worker="w1"),
+    ])
+    with EvalClient(cluster.host, cluster.port, timeout=120) as client:
+        registered = _register(client, "kill", 3, seed0=200)
+        injector, fut = inject(cluster, schedule, proxies)
+        _drive(client, registered, fut, register_seed=250)
+        assert len(injector.applied) == 2 and not injector.skipped
+        _assert_converged(cluster, client, registered)
+    assert cluster.router.counters["restarts"] >= 2
+
+
+def test_chaos_hangs_recover_via_health_probe(chaos_cluster):
+    """SIGSTOP-hangs: the worker is alive but silent; either the hang
+    outlasts the probe timeout (SIGKILL + restart) or it resumes — both
+    must be invisible to acknowledged state."""
+    cluster, proxies = chaos_cluster
+    _wait_all_ready(cluster)
+    schedule = ChaosSchedule([
+        ChaosEvent(t=0.10, kind="hang", worker="w0", duration=0.35),
+        ChaosEvent(t=0.90, kind="hang", worker="w1", duration=0.35),
+    ])
+    with EvalClient(cluster.host, cluster.port, timeout=120) as client:
+        registered = _register(client, "hang", 3, seed0=300)
+        injector, fut = inject(cluster, schedule, proxies)
+        _drive(client, registered, fut)
+        assert len(injector.applied) == 2
+        _assert_converged(cluster, client, registered)
+
+
+def test_chaos_truncation_never_relays_garbage(chaos_cluster):
+    """Torn frames on the worker wire: the router's client must treat a
+    response cut mid-frame as a connection loss and fail over — the end
+    client never sees partial bytes."""
+    cluster, proxies = chaos_cluster
+    _wait_all_ready(cluster)
+    schedule = ChaosSchedule([
+        ChaosEvent(t=0.05, kind="truncate", worker="w0"),
+        ChaosEvent(t=0.35, kind="truncate", worker="w1"),
+        ChaosEvent(t=0.65, kind="truncate", worker="w0"),
+    ])
+    with EvalClient(cluster.host, cluster.port, timeout=120) as client:
+        registered = _register(client, "trunc", 3, seed0=400)
+        injector, fut = inject(cluster, schedule, proxies)
+        _drive(client, registered, fut)
+        assert len(injector.applied) == 3
+        # a pending truncate_next fires on the next chunk through the
+        # proxy; keep traffic flowing until at least one actually struck
+        deadline = time.monotonic() + 15
+        while (sum(p.counters["truncated"]
+                   for p in proxies.proxies.values()) == 0
+               and time.monotonic() < deadline):
+            for qrel_id, (run, want) in registered.items():
+                try:
+                    assert client.evaluate(
+                        qrel_id, run=run).per_query == want
+                except TOLERATED:
+                    pass
+        assert sum(p.counters["truncated"]
+                   for p in proxies.proxies.values()) >= 1
+        _assert_converged(cluster, client, registered)
+
+
+def test_chaos_delay_with_deadlines_hedges_or_times_out(chaos_cluster):
+    """A slow replica (per-chunk delay beyond the hedge point): requests
+    carrying deadlines either hedge to the fast sibling or answer
+    deadline_exceeded — never a late-garbled result."""
+    cluster, proxies = chaos_cluster
+    _wait_all_ready(cluster)
+    schedule = ChaosSchedule([
+        ChaosEvent(t=0.05, kind="delay", worker="w0", duration=0.7),
+        ChaosEvent(t=0.40, kind="delay", worker="w1", duration=0.7),
+    ])
+    with EvalClient(cluster.host, cluster.port, timeout=120) as client:
+        registered = _register(client, "slow", 2, seed0=500)
+        injector, fut = inject(cluster, schedule, proxies)
+        _drive(client, registered, fut, deadline=1.0)
+        assert len(injector.applied) == 2
+        _assert_converged(cluster, client, registered)
+    for proxy in proxies.proxies.values():
+        assert proxy.delay == 0.0  # trailing effects undone by run()
+
+
+@pytest.mark.parametrize("seed", [3, 17])
+def test_chaos_random_schedule_converges(chaos_cluster, seed):
+    """The headline invariant: a SEEDED random mix of every fault kind,
+    with registrations arriving mid-schedule, ends with zero lost acks
+    and bit-identical answers."""
+    cluster, proxies = chaos_cluster
+    _wait_all_ready(cluster)
+    schedule = ChaosSchedule.random(seed, cluster.worker_names,
+                                    n_events=6, horizon=2.0)
+    assert (schedule.events ==
+            ChaosSchedule.random(seed, cluster.worker_names,
+                                 n_events=6, horizon=2.0).events)
+    with EvalClient(cluster.host, cluster.port, timeout=120) as client:
+        registered = _register(client, f"rand{seed}", 3, seed0=600 + seed)
+        injector, fut = inject(cluster, schedule, proxies)
+        _drive(client, registered, fut, register_seed=700 + seed)
+        assert len(injector.applied) + len(injector.skipped) == 6
+        _assert_converged(cluster, client, registered)

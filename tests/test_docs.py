@@ -44,6 +44,10 @@ def test_doc_code_blocks_run(path):
     "repro.serve.batcher",
     "repro.serve.wire",
     "repro.serve.testing",
+    "repro.serve.cluster.ring",
+    "repro.serve.cluster.breaker",
+    "repro.serve.cluster.journal",
+    "repro.serve.cluster.chaos",
     "repro.client",
     "repro.client.aio",
     "repro.client.sync",

@@ -317,6 +317,41 @@ def test_protocol_handle_line_roundtrip(collection):
         assert got[qid]["map"] == pytest.approx(want[qid]["map"], abs=1e-9)
 
 
+def test_protocol_deadline_ms_enforced_server_side(collection):
+    """A worker enforces ``deadline_ms`` on its own: an op that cannot
+    finish inside the budget answers ``deadline_exceeded`` instead of
+    holding the connection, and an ample budget changes nothing."""
+    run, qrel = collection
+
+    async def main():
+        svc = EvaluationService(backend="single", window=0.25)
+        reg = json.loads(await handle_line(svc, json.dumps(
+            {"op": "register_qrel", "id": 1, "qrel_id": "c",
+             "qrel": qrel, "measures": ["map"], "deadline_ms": 60000})))
+        assert reg["ok"], reg
+        # the evaluate sits in the 250 ms coalescing window: a 30 ms
+        # budget cannot be met, and the worker says so machine-readably
+        late = json.loads(await handle_line(svc, json.dumps(
+            {"op": "evaluate", "id": 2, "qrel_id": "c", "run": run,
+             "deadline_ms": 30})))
+        assert not late["ok"] and late["code"] == "deadline_exceeded"
+        assert "deadline_ms" in late["error"]
+        ample = json.loads(await handle_line(svc, json.dumps(
+            {"op": "evaluate", "id": 3, "qrel_id": "c", "run": run,
+             "deadline_ms": 60000})))
+        plain = json.loads(await handle_line(svc, json.dumps(
+            {"op": "evaluate", "id": 4, "qrel_id": "c", "run": run})))
+        assert ample["ok"] and plain["ok"]
+        assert ample["result"] == plain["result"]  # budget leaves no trace
+        for bad in (0, -5, True, "soon"):
+            resp = json.loads(await handle_line(svc, json.dumps(
+                {"op": "ping", "id": 9, "deadline_ms": bad})))
+            assert not resp["ok"] and resp["code"] == "invalid", resp
+        return True
+
+    assert asyncio.run(main())
+
+
 def test_unjudged_queries_skipped_across_serve_roundtrip(collection):
     """Run-only queries are skipped trec_eval-style, bit-identically across
     the dict path, the RunBuffer path, and a serve round-trip."""
